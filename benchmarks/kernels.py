@@ -1,0 +1,70 @@
+"""Kernel-level benchmark: the XNOR/binary matmul paths.
+
+What can be *measured* on this CPU container: the XLA-lowered reference
+paths (dense bf16 vs packed-binary weight matmul) — functional parity and
+host wall-clock. What must be *derived*: the TPU roofline for each path
+(bytes moved per output), reported alongside. The Pallas kernels themselves
+are validated for correctness in tests/test_kernels.py under
+interpret=True; their TPU performance model is the derived column here.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitpack
+from repro.kernels import ops, ref
+
+SHAPES = [(256, 4096, 4096), (256, 4096, 11008)]   # (M, K, N) yi-6b-ish
+
+
+def _time(fn, *a, reps=3):
+    fn(*a)[0].block_until_ready() if isinstance(fn(*a), tuple) else \
+        fn(*a).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*a)
+        (r[0] if isinstance(r, tuple) else r).block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(verbose: bool = True, measure: bool = True) -> dict:
+    out = {"rows": []}
+    for m, k, n in SHAPES:
+        key = jax.random.PRNGKey(0)
+        a = jax.random.normal(key, (m, k), jnp.bfloat16)
+        w = jax.random.normal(key, (k, n), jnp.float32)
+        w_words = ops.pack_weights(w.T)                     # (N, K/32)
+        alpha = jnp.mean(jnp.abs(w), axis=0)
+
+        dense_fn = jax.jit(lambda aa, ww: aa @ ww.astype(jnp.bfloat16))
+        bin_fn = jax.jit(lambda aa, wp, al: ref.binary_weight_matmul_ref(
+            aa, wp, k=k, scale=al))
+
+        # TPU-derived: weight bytes per step (the decode-bound quantity)
+        dense_bytes = k * n * 2
+        packed_bytes = bitpack.packed_len(k) * n * 4
+        row = {"shape": (m, k, n),
+               "weight_bytes_dense": dense_bytes,
+               "weight_bytes_packed": packed_bytes,
+               "bytes_ratio": dense_bytes / packed_bytes}
+        if measure:
+            row["dense_s"] = _time(dense_fn, a, w)
+            row["binary_s"] = _time(bin_fn, a, w_words, alpha)
+        out["rows"].append(row)
+        if verbose:
+            msg = (f"({m},{k},{n}): weight bytes {dense_bytes/1e6:.1f}MB → "
+                   f"{packed_bytes/1e6:.1f}MB ({row['bytes_ratio']:.1f}× "
+                   f"less HBM traffic on TPU)")
+            if measure:
+                msg += (f"; cpu wall: dense {row['dense_s']*1e3:.0f}ms, "
+                        f"binary {row['binary_s']*1e3:.0f}ms")
+            print(msg)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Roofline report: experiments/cells/*.json → the EXPERIMENTS.md §Roofline
+table (per arch × shape × mesh: three terms, bottleneck, useful ratio)."""
+from __future__ import annotations
+
+import argparse
+
+from repro.launch.dryrun_lib import HW, load_results
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "—"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def rows(out_dir: str = "experiments/cells", mesh: str | None = "16x16",
+         quant: str | None = None) -> list[dict]:
+    res = load_results(out_dir)
+    res = [r for r in res
+           if (mesh is None or r["mesh"] == mesh)
+           and (quant is None or r["quant"] == quant)]
+    for r in res:
+        terms = {"compute": r["t_compute"], "memory": r["t_memory"],
+                 "collective": r["t_collective"]}
+        t_bound = max(terms.values())
+        r["t_bound"] = t_bound
+        # roofline fraction: useful-compute time / bound term
+        r["mfu_bound"] = ((r["model_flops"] / 256 / HW["peak_flops"])
+                          / t_bound if t_bound else 0.0)
+    return sorted(res, key=lambda r: (r["arch"], r["shape"], r["quant"]))
+
+
+def markdown(out_dir: str = "experiments/cells", mesh: str = "16x16",
+             quant: str | None = None) -> str:
+    lines = [
+        f"| arch | shape | quant | t_compute | t_memory | t_coll | "
+        f"bottleneck | roofline frac | useful ratio |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows(out_dir, mesh, quant):
+        if not r["ok"]:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['quant']} | "
+                         f"FAIL | | | {r['error'][:40]} | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['quant']} | "
+            f"{fmt_s(r['t_compute'])} | {fmt_s(r['t_memory'])} | "
+            f"{fmt_s(r['t_collective'])} | {r['bottleneck']} | "
+            f"{r['mfu_bound']:.3f} | {r['useful_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def run(verbose: bool = True, out_dir: str = "experiments/cells") -> dict:
+    res = rows(out_dir, mesh=None)
+    n_ok = sum(1 for r in res if r["ok"])
+    if verbose:
+        print(markdown(out_dir))
+        print(f"\n{n_ok}/{len(res)} cells ok")
+    return {"n_ok": n_ok, "n": len(res)}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/cells")
+    ap.add_argument("--mesh", default="16x16")
+    a = ap.parse_args()
+    print(markdown(a.out, a.mesh))

@@ -1,0 +1,48 @@
+"""Benchmark harness: one entry per paper table/figure + the roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only table3
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    choices=["all", "table3", "table5", "fig7", "roofline",
+                             "kernels"])
+    ap.add_argument("--no-measure", action="store_true",
+                    help="skip wall-clock measurements (CI mode)")
+    args = ap.parse_args(argv)
+
+    results = []
+
+    def bench(name, fn):
+        if args.only not in ("all", name):
+            return
+        print(f"\n===== {name} " + "=" * (60 - len(name)))
+        t0 = time.perf_counter()
+        out = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        results.append((name, us, out))
+
+    from benchmarks import fig7, kernels, roofline, table3, table5
+    bench("table3", lambda: table3.run())
+    bench("table5", lambda: table5.run())
+    bench("fig7", lambda: fig7.run(measure=not args.no_measure))
+    bench("kernels", lambda: kernels.run(measure=not args.no_measure))
+    bench("roofline", lambda: roofline.run())
+
+    print("\nname,us_per_call,derived")
+    for name, us, out in results:
+        key = {"table3": "table_match", "table5": "ok",
+               "roofline": "n_ok"}.get(name)
+        derived = out.get(key, "") if isinstance(out, dict) else ""
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper Table 3 reproduction: per-layer UF/P/Cycle_conv/Cycle_est.
+
+Validates eqs. 9/11 against the paper's published numbers EXACTLY, and the
+paper's optimization procedure (equalize Cycle_est under the PE budget)
+against the published (UF, P) allocation.
+"""
+from __future__ import annotations
+
+from repro.core import throughput as tp
+
+
+def run(verbose: bool = True) -> dict:
+    rep = tp.reproduce_table3()
+    opt = tp.optimize_parallelism()
+    rows, ok = [], True
+    for name, (uf, p, cconv, cest, cr) in tp.PAPER_TABLE3.items():
+        muf, mp, mcconv, mcest = rep[name]
+        ouf, op_, ocest = opt[name]
+        match = (muf, mp, mcconv, mcest) == (uf, p, cconv, cest)
+        opt_match = (ouf, op_) == (uf, p)
+        ok &= match and opt_match
+        rows.append((name, uf, p, cconv, mcest, cest, cr,
+                     "=" if match else "≠", "=" if opt_match else "≠"))
+    fps = tp.system_throughput_fps(
+        {n: rep[n][3] for n in rep})
+    tops = tp.tops(fps)
+    if verbose:
+        print(f"{'layer':8s} {'UF':>5s} {'P':>3s} {'Cycle_conv':>11s} "
+              f"{'est(ours)':>10s} {'est(paper)':>10s} {'Cycle_r':>8s} "
+              f"eq opt")
+        for r in rows:
+            print(f"{r[0]:8s} {r[1]:5d} {r[2]:3d} {r[3]:11d} {r[4]:10d} "
+                  f"{r[5]:10d} {r[6]:8d}  {r[7]}  {r[8]}")
+        print(f"throughput (eq.12 @ {tp.FREQ_HZ/1e6:.0f} MHz, est cycles): "
+              f"{fps:.0f} FPS  (paper real: {tp.PAPER_FPS} FPS)")
+        print(f"TOPS @ paper FPS: {tp.tops(tp.PAPER_FPS):.3f} "
+              f"(paper: {tp.PAPER_TOPS})")
+    return {"table_match": ok, "fps_est": fps, "tops_est": tops,
+            "tops_at_paper_fps": tp.tops(tp.PAPER_FPS)}
+
+
+if __name__ == "__main__":
+    out = run()
+    assert out["table_match"], "Table 3 mismatch"

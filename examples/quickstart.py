@@ -1,0 +1,63 @@
+"""Quickstart: the paper's technique end to end in 80 lines.
+
+1. Build the paper's reformulated ops: bit-packed XNOR dot product (eq. 5)
+   with the fused NormBinarize comparator (eq. 8) — and check them against
+   the ±1 convolution they replace (eq. 3/6).
+2. Apply the same technique to an LM linear layer ("binary" quant mode).
+3. Show the throughput model reproducing the paper's Table 3 bottleneck.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitpack
+from repro.core.normbinarize import BNParams, fold_threshold
+from repro.core.throughput import optimize_parallelism
+from repro.kernels import ops
+
+# --- 1. the paper's reformulation, bit-exact --------------------------------
+rng = np.random.default_rng(0)
+M, K, N = 8, 512, 32
+a_pm1 = np.sign(rng.standard_normal((M, K))).astype(np.float32)   # ±1 acts
+w_pm1 = np.sign(rng.standard_normal((N, K))).astype(np.float32)   # ±1 weights
+
+# reference: the original BCNN convolution semantics (eq. 3): ±1 dot product
+y_ref = a_pm1 @ w_pm1.T                                           # (M, N)
+
+# ours: packed XNOR dot product (eq. 5) + compensation (eq. 6)
+a_words = bitpack.pack_pm1(jnp.asarray(a_pm1))
+w_words = bitpack.pack_pm1(jnp.asarray(w_pm1))
+y_l = ops.xnor_matmul(a_words, w_words, k=K, path="xla")          # agree-counts
+y_ours = bitpack.pm1_from_xnor(y_l, K)                            # 2y−cnum
+np.testing.assert_array_equal(np.asarray(y_ours), y_ref.astype(np.int32))
+print(f"eq.5/6 XNOR dot ≡ ±1 dot: exact on {M}×{N} outputs ✓")
+
+# fused NormBinarize (eq. 8): BN + sign in ONE comparison per output
+bn = BNParams(mean=jnp.zeros(N), var=jnp.ones(N),
+              gamma=jnp.full((N,), 0.5), beta=jnp.zeros(N), eps=1e-4)
+thr = fold_threshold(bn, cnum=K)
+bits = ops.xnor_matmul(a_words, w_words, k=K, thr_c=thr.c,
+                       thr_flip=thr.flip, path="xla")
+ref_bits = (y_ref * 0.5 / np.sqrt(1 + 1e-4) >= 0).astype(np.int8)
+np.testing.assert_array_equal(np.asarray(bits), ref_bits)
+print("eq.8 NormBinarize(BN∘sign) ≡ one threshold compare ✓")
+
+# --- 2. the same technique as an LM config knob -----------------------------
+from repro import configs
+from repro.models import transformer
+
+cfg = configs.get_config("qwen3-8b", smoke=True, quant="binary")
+params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)), jnp.int32)
+logits, _ = transformer.forward_train(
+    cfg, params, transformer.Batch(tokens=toks, targets=toks))
+print(f"binary-quant {cfg.name} smoke forward: logits {logits.shape}, "
+      f"finite={bool(jnp.isfinite(logits).all())} ✓")
+
+# --- 3. the paper's throughput model ----------------------------------------
+alloc = optimize_parallelism()
+bottleneck = max(v[2] for v in alloc.values())
+print(f"Table-3 optimizer: bottleneck Cycle_est = {bottleneck} "
+      f"(paper: 12288) ✓")

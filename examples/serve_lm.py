@@ -1,0 +1,84 @@
+"""Batched LM serving with continuous batching — the paper's
+batch-insensitivity claim in its TPU-serving form.
+
+Serves a (smoke-size) qwen3-8b with the binary-weights technique enabled,
+under two arrival patterns:
+  a) one big batch of requests up front (the GPU-friendly regime),
+  b) requests trickling in one at a time (the paper's "online individual
+     requests" regime — where the FPGA wins 8.3×).
+Continuous batching keeps per-token cost ≈ equal in both regimes; the
+script reports both rates.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import transformer
+from repro.serve import ServingEngine
+
+
+def run_pattern(cfg, params, *, n_req: int, slots: int, trickle: bool,
+                seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    eng = ServingEngine(cfg, params, n_slots=slots, max_len=96)
+    prompts = [rng.integers(0, cfg.vocab_size, (8,)).tolist()
+               for _ in range(n_req)]
+    t0 = time.time()
+    out = {}
+    if trickle:
+        # submit one request per engine tick (online arrival)
+        it = iter(prompts)
+        pending = n_req
+        eng.submit(next(it), max_new_tokens=16)
+        while len(out) < n_req:
+            res = {}
+            eng._admit()
+            eng._tick(res)
+            out.update(res)
+            nxt = next(it, None)
+            if nxt is not None:
+                eng.submit(nxt, max_new_tokens=16)
+    else:
+        for p in prompts:
+            eng.submit(p, max_new_tokens=16)
+        out = eng.run()
+    dt = time.time() - t0
+    n_tok = sum(len(v) for v in out.values())
+    assert len(out) == n_req
+    return {"tok_s": n_tok / dt, "steps": eng.steps_executed, "secs": dt}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--quant", default="binary_weights",
+                    choices=["none", "binary", "binary_weights"])
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_config("qwen3-8b", smoke=True, quant=args.quant)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+
+    a = run_pattern(cfg, params, n_req=args.requests, slots=args.slots,
+                    trickle=False)
+    b = run_pattern(cfg, params, n_req=args.requests, slots=args.slots,
+                    trickle=True)
+    print(f"batch arrival   : {a['tok_s']:7.1f} tok/s "
+          f"({a['steps']} steps, {a['secs']:.1f}s)")
+    print(f"trickle arrival : {b['tok_s']:7.1f} tok/s "
+          f"({b['steps']} steps, {b['secs']:.1f}s)")
+    print(f"online/batch throughput ratio: {b['tok_s'] / a['tok_s']:.2f} "
+          f"(continuous batching keeps the online regime close to 1.0 — "
+          f"the paper's batch-insensitivity, served)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,90 @@
+"""Fault-tolerant LM training: checkpoint → crash → resume → identical run.
+
+Demonstrates the framework's fault-tolerance contract end to end on a
+smoke-size binary-weights LM:
+
+  1. train N steps straight through            → loss curve A
+  2. train the same N steps with a simulated crash at N/2 and a resume
+     from the step-atomic checkpoint           → loss curve B
+  3. assert A == B bitwise at every common step (deterministic data
+     pipeline + exact state restore)
+
+Run:  PYTHONPATH=src python examples/train_lm_restartable.py
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data import SyntheticLM
+from repro.train import checkpoint as ckpt_lib
+from repro.train import optimizer as opt_lib
+from repro.train import train_loop
+
+
+def train_range(cfg, adamw, data, state, start, stop, step_fn, losses):
+    for s in range(start, stop):
+        batch = jax.tree.map(lambda a: jnp.asarray(a), data.batch(s))
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+    return state
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args(argv)
+    half = args.steps // 2
+
+    cfg = configs.get_config("yi-6b", smoke=True, quant="binary_weights")
+    adamw = opt_lib.AdamW(lr=1e-3, clip_latent_unit=True)
+    step_fn = jax.jit(train_loop.make_train_step(cfg, adamw))
+    data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=7)
+
+    # --- run A: straight through -------------------------------------------
+    state = train_loop.init_train_state(cfg, jax.random.PRNGKey(0), adamw)
+    losses_a: list[float] = []
+    state = train_range(cfg, adamw, data, state, 0, args.steps, step_fn,
+                        losses_a)
+
+    # --- run B: crash at half, restore, finish ------------------------------
+    ckdir = tempfile.mkdtemp(prefix="repro_ck_")
+    try:
+        state = train_loop.init_train_state(cfg, jax.random.PRNGKey(0), adamw)
+        losses_b: list[float] = []
+        state = train_range(cfg, adamw, data, state, 0, half, step_fn,
+                            losses_b)
+        ckpt_lib.save(ckdir, half, state)
+        del state                                    # "crash"
+
+        abstract = jax.eval_shape(
+            lambda: train_loop.init_train_state(cfg, jax.random.PRNGKey(0),
+                                                adamw))
+        state, restored_step = ckpt_lib.restore(ckdir, abstract)
+        assert restored_step == half
+        state = train_range(cfg, adamw, data, state, half, args.steps,
+                            step_fn, losses_b)
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+
+    print("step  straight   crash+resume")
+    for i, (a, b) in enumerate(zip(losses_a, losses_b)):
+        mark = "  <- resumed here" if i == half else ""
+        print(f"{i + 1:4d}  {a:.6f}   {b:.6f}{mark}")
+    np.testing.assert_allclose(losses_a, losses_b, rtol=0, atol=0)
+    print(f"\ncrash/resume run identical to straight run for "
+          f"{args.steps} steps ✓ (loss {losses_a[0]:.3f} → "
+          f"{losses_a[-1]:.3f})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

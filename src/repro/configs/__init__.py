@@ -1,0 +1,46 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each module exports CONFIG (exact published config), SMOKE_CONFIG (reduced
+same-family config for CPU tests) and SHAPES / SKIPPED_SHAPES (the assigned
+input-shape cells).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_MODULES = {
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "phi4-mini-3.8b": "repro.configs.phi4_mini_3_8b",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "yi-6b": "repro.configs.yi_6b",
+    "phi-3-vision-4.2b": "repro.configs.phi3_vision_4_2b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+}
+
+ARCH_NAMES = tuple(ARCH_MODULES)
+
+
+def _mod(name: str):
+    if name not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCH_MODULES)}")
+    return importlib.import_module(ARCH_MODULES[name])
+
+
+def get_config(name: str, *, smoke: bool = False, quant: str = "none"):
+    m = _mod(name)
+    cfg = m.SMOKE_CONFIG if smoke else m.CONFIG
+    if quant != "none":
+        cfg = cfg.with_(quant=quant)
+    return cfg
+
+
+def get_shapes(name: str):
+    return list(_mod(name).SHAPES)
+
+
+def get_skipped_shapes(name: str) -> dict[str, str]:
+    return dict(getattr(_mod(name), "SKIPPED_SHAPES", {}))

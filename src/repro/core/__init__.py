@@ -1,0 +1,5 @@
+"""repro.core — the paper's contribution in JAX.
+
+Binary-encoded convolution (eq. 5), comparator-based normalization (eq. 8),
+the 9-layer CIFAR-10 BCNN (Table 2), and the throughput model (eqs. 9–12).
+"""

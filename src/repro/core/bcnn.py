@@ -1,0 +1,199 @@
+"""The paper's 9-layer CIFAR-10 BCNN (Table 2), faithful end to end.
+
+Layer stack (paper Table 2, §2.5):
+
+    CONV-1  3→128   3×3  out 128×32×32   (FpDotProduct, eq. 7: 6-bit × 2-bit)
+    CONV-2  128→128 3×3  +MP             out 128×16×16
+    CONV-3  128→256 3×3                  out 256×16×16
+    CONV-4  256→256 3×3  +MP             out 256×8×8
+    CONV-5  256→512 3×3                  out 512×8×8
+    CONV-6  512→512 3×3  +MP             out 512×4×4
+    FC-1    8192→1024
+    FC-2    1024→1024
+    FC-3    1024→10  (Norm only, no binarize — paper Fig. 3 step 3)
+
+Two forwards:
+* ``forward_train``  — differentiable (STE), batch-stat BN, updates running
+  stats; used by examples/train_bcnn_cifar10.py.
+* ``forward_packed`` — deployment path: packed int32 weights + fused eq. 8
+  comparators via the Pallas XNOR kernels. tests/test_bcnn.py asserts the two
+  paths agree bit-for-bit on the binary feature maps.
+"""
+from __future__ import annotations
+
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bconv, bitpack, blinear
+from repro.core.binarize import binarize_ste, quantize_input_6bit, quantize_weight_2bit
+from repro.core.normbinarize import BNParams, norm_only
+
+CONV_SPECS = [  # (in_ch, out_ch, maxpool) — paper Table 2
+    (3, 128, False),    # CONV-1 (fp)
+    (128, 128, True),   # CONV-2
+    (128, 256, False),  # CONV-3
+    (256, 256, True),   # CONV-4
+    (256, 512, False),  # CONV-5
+    (512, 512, True),   # CONV-6
+]
+FC_SPECS = [(8192, 1024), (1024, 1024), (1024, 10)]  # FC-1..3
+BN_EPS = 1e-4
+BN_MOMENTUM = 0.9
+
+
+class BCNNParams(NamedTuple):
+    conv1: bconv.FpConvParams
+    convs: tuple          # BConvParams × 5 (CONV-2..6)
+    fcs: tuple            # BLinearParams × 3
+
+
+def init(key) -> BCNNParams:
+    keys = jax.random.split(key, 9)
+    conv1 = bconv.fpconv_init(keys[0], *CONV_SPECS[0][:2])
+    convs = tuple(bconv.init(keys[i], CONV_SPECS[i][0], CONV_SPECS[i][1])
+                  for i in range(1, 6))
+    fcs = tuple(blinear.init(keys[6 + j], *FC_SPECS[j]) for j in range(3))
+    return BCNNParams(conv1=conv1, convs=convs, fcs=fcs)
+
+
+# ---------------------------------------------------------------------------
+# Training forward (STE) with batch-stat BN
+# ---------------------------------------------------------------------------
+
+def _bn_train(y, gamma, beta, axes):
+    mean = jnp.mean(y, axis=axes)
+    var = jnp.var(y, axis=axes)
+    z = (y - mean) / jnp.sqrt(var + BN_EPS) * gamma + beta
+    return z, mean, var
+
+
+def forward_train(params: BCNNParams, x01: jnp.ndarray):
+    """x01: (N,32,32,3) in [0,1]. Returns (logits, batch_stats).
+
+    batch_stats is a list of (mean, var) per normalized layer, in layer order,
+    for the trainer's running-average update (BN_MOMENTUM).
+    """
+    stats = []
+    # CONV-1 (fp path, eq. 7)
+    p = params.conv1
+    a0 = quantize_input_6bit(x01)
+    w2 = quantize_weight_2bit(p.w)
+    y = jax.lax.conv_general_dilated(
+        a0, jnp.transpose(w2, (1, 2, 3, 0)), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    z, m, v = _bn_train(y, p.bn_gamma, p.bn_beta, (0, 1, 2))
+    stats.append((m, v))
+    a = binarize_ste(z)
+
+    # CONV-2..6 (binary)
+    for i, p in enumerate(params.convs):
+        mp = CONV_SPECS[i + 1][2]
+        fh, fw = p.w.shape[1], p.w.shape[2]
+        ap = jnp.pad(a, ((0, 0), (fh // 2, fh // 2), (fw // 2, fw // 2),
+                         (0, 0)), constant_values=-1.0)
+        y = jax.lax.conv_general_dilated(
+            ap, jnp.transpose(binarize_ste(p.w), (1, 2, 3, 0)), (1, 1),
+            "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        if mp:
+            y = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        z, m, v = _bn_train(y, p.bn_gamma, p.bn_beta, (0, 1, 2))
+        stats.append((m, v))
+        a = binarize_ste(z)
+
+    # FC-1..3
+    a = a.reshape(a.shape[0], -1)                             # (N, 8192) hwc
+    for j, p in enumerate(params.fcs):
+        y = a @ binarize_ste(p.w).T
+        z, m, v = _bn_train(y, p.bn_gamma, p.bn_beta, (0,))
+        stats.append((m, v))
+        a = binarize_ste(z) if j < 2 else z                   # FC-3: Norm only
+    return a, stats
+
+
+def update_running_stats(params: BCNNParams, stats) -> BCNNParams:
+    """Fold fresh batch statistics into the stored running BN stats."""
+    def upd(p, st):
+        m, v = st
+        return p._replace(
+            bn_mean=BN_MOMENTUM * p.bn_mean + (1 - BN_MOMENTUM) * m,
+            bn_var=BN_MOMENTUM * p.bn_var + (1 - BN_MOMENTUM) * v)
+    conv1 = upd(params.conv1, stats[0])
+    convs = tuple(upd(p, stats[1 + i]) for i, p in enumerate(params.convs))
+    fcs = tuple(upd(p, stats[6 + j]) for j, p in enumerate(params.fcs))
+    return BCNNParams(conv1=conv1, convs=convs, fcs=fcs)
+
+
+# ---------------------------------------------------------------------------
+# Inference forward with *stored* BN stats, fp ±1 domain (oracle for packed)
+# ---------------------------------------------------------------------------
+
+def forward_eval(params: BCNNParams, x01: jnp.ndarray) -> jnp.ndarray:
+    """Inference logits using running BN stats (the packed path's oracle)."""
+    p = params.conv1
+    a = bconv.fpconv_apply(p, x01)
+    for i, p in enumerate(params.convs):
+        a = bconv.apply_train(p, a, maxpool=CONV_SPECS[i + 1][2])
+    a = a.reshape(a.shape[0], -1)
+    for j, p in enumerate(params.fcs):
+        a = blinear.apply_train(p, a, binarize_out=(j < 2))
+    return a
+
+
+# ---------------------------------------------------------------------------
+# Deployment: fold + packed forward (Pallas XNOR kernels, eq. 5/8)
+# ---------------------------------------------------------------------------
+
+class BCNNPacked(NamedTuple):
+    conv1: bconv.FpConvParams          # first layer stays fixed-point (eq. 7)
+    convs: tuple                       # BConvPacked × 5
+    fcs: tuple                         # BLinearPacked × 2 (FC-1, FC-2)
+    fc3_w_words: jnp.ndarray           # packed FC-3 weights
+    fc3_bn: BNParams                   # FC-3 ends with Norm (no binarize)
+    fc3_k: int
+
+
+def fold_model(params: BCNNParams) -> BCNNPacked:
+    convs = tuple(bconv.fold(p) for p in params.convs)
+    fcs = tuple(blinear.fold(p) for p in params.fcs[:2])
+    p3 = params.fcs[2]
+    return BCNNPacked(
+        conv1=params.conv1, convs=convs, fcs=fcs,
+        fc3_w_words=bitpack.pack_pm1(p3.w),
+        fc3_bn=BNParams(p3.bn_mean, p3.bn_var, p3.bn_gamma, p3.bn_beta,
+                        BN_EPS),
+        fc3_k=p3.w.shape[1])
+
+
+def forward_packed(packed: BCNNPacked, x01: jnp.ndarray,
+                   path: str = "mxu") -> jnp.ndarray:
+    """Deployment forward: bit feature maps all the way (paper Fig. 3).
+
+    Not jit'd at the top level: the packed artifacts carry static ints (k)
+    that must stay Python values; each XNOR kernel call is jit'd internally.
+    """
+    from repro.kernels import ops
+    # layer 1: fp conv → NormBinarize → {0,1} bits
+    a_pm1 = bconv.fpconv_apply(packed.conv1, x01)             # ±1
+    a_bits = bitpack.encode_pm1(a_pm1)                        # {0,1}
+    for i, fp in enumerate(packed.convs):
+        a_bits = bconv.apply_packed(fp, a_bits,
+                                    maxpool=CONV_SPECS[i + 1][2], path=path)
+    words = bitpack.pack_bits(a_bits.reshape(a_bits.shape[0], -1))  # (N, 256)
+    for fp in packed.fcs:
+        bits = blinear.apply_packed(fp, words, path=path)
+        words = bitpack.pack_bits(bits)
+    # FC-3: XnorDotProduct then Norm (no binarize)
+    y_l = ops.xnor_matmul(words, packed.fc3_w_words, k=packed.fc3_k, path=path)
+    return norm_only(y_l, packed.fc3_bn, packed.fc3_k)
+
+
+def loss_fn(params: BCNNParams, x01: jnp.ndarray, labels: jnp.ndarray):
+    """Softmax cross-entropy over the Norm output + BN stat side-channel."""
+    logits, stats = forward_train(params, x01)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    return loss, stats

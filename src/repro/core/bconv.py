@@ -1,0 +1,166 @@
+"""Binary 2-D convolution (paper §3.1) — XNOR dot product via im2col.
+
+The paper's convolutional kernel computes each output pixel as an XNOR dot
+product over an FW×FH×FD reception field (eq. 3/5). On TPU we lower this as
+im2col → packed XNOR matmul, which maps the reduction onto the same kernels
+as the fully-connected layers (the paper does the same: "The hardware kernel
+of fully-connected layers is similar to Fig. 6").
+
+Layout: NHWC feature maps, HWIO→(O, FH*FW*I) flattened filters.
+First layer (eq. 7): FpDotProduct of 6-bit activations × 2-bit weights —
+implemented as a regular conv in fp with quantized operands (TPU has no
+sub-8-bit dtypes; DESIGN.md §2.2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitpack
+from repro.core.binarize import binarize_ste, quantize_input_6bit, quantize_weight_2bit
+from repro.core.normbinarize import BNParams, NBThreshold, fold_threshold
+from repro.kernels import ops
+
+
+class BConvParams(NamedTuple):
+    w: jnp.ndarray          # (O, FH, FW, I) latent fp filters
+    bn_mean: jnp.ndarray    # (O,)
+    bn_var: jnp.ndarray
+    bn_gamma: jnp.ndarray
+    bn_beta: jnp.ndarray
+
+
+class BConvPacked(NamedTuple):
+    w_words: jnp.ndarray    # (O, ceil(FH*FW*I/32)) int32
+    thr: NBThreshold
+    k: int                  # FH*FW*I = the paper's cnum
+
+
+def init(key, in_ch: int, out_ch: int, fh: int = 3, fw: int = 3,
+         dtype=jnp.float32) -> BConvParams:
+    w = jax.random.uniform(key, (out_ch, fh, fw, in_ch), dtype, -1.0, 1.0)
+    return BConvParams(w=w,
+                       bn_mean=jnp.zeros((out_ch,), dtype),
+                       bn_var=jnp.ones((out_ch,), dtype),
+                       bn_gamma=jnp.ones((out_ch,), dtype),
+                       bn_beta=jnp.zeros((out_ch,), dtype))
+
+
+def _im2col(x: jnp.ndarray, fh: int, fw: int, pad: int = 1) -> jnp.ndarray:
+    """NHWC → (N, H, W, FH*FW*C) patches (stride 1, zero padding `pad`)."""
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    cols = []
+    for dy in range(fh):
+        for dx in range(fw):
+            cols.append(jax.lax.dynamic_slice(
+                xp, (0, dy, dx, 0), (n, h, w, c)))
+    return jnp.concatenate(cols, axis=-1)
+
+
+def apply_train(p: BConvParams, a_pm1: jnp.ndarray, *,
+                binarize_out: bool = True, maxpool: bool = False) -> jnp.ndarray:
+    """Differentiable binary conv (±1 in / ±1 out), BN, optional 2×2 maxpool.
+
+    Pool-before-binarize note: the paper pools the *pre-binarize* y_l
+    (Fig. 3: MP then NormBinarize). max-pool commutes with the monotone
+    NormBinarize threshold, so either order is bit-equivalent; we keep the
+    paper's order.
+    """
+    wb = binarize_ste(p.w)
+    # Pad with −1, not 0: the paper's "zero padding" is in the {1,0} bit
+    # encoding where bit 0 *is* −1 (eq. 4). This keeps the train path
+    # bit-identical to the packed XNOR path (whose pad bits are 0 = −1).
+    fh, fw = p.w.shape[1], p.w.shape[2]
+    ap = jnp.pad(a_pm1, ((0, 0), (fh // 2, fh // 2), (fw // 2, fw // 2),
+                         (0, 0)), constant_values=-1.0)
+    y = jax.lax.conv_general_dilated(
+        ap, jnp.transpose(wb, (1, 2, 3, 0)),                  # HWIO
+        window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if maxpool:
+        y = jax.lax.reduce_window(y, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    z = (y - p.bn_mean) / jnp.sqrt(p.bn_var + 1e-4) * p.bn_gamma + p.bn_beta
+    return binarize_ste(z) if binarize_out else z
+
+
+def fold(p: BConvParams) -> BConvPacked:
+    o, fh, fw, i = p.w.shape
+    k = fh * fw * i
+    w_flat = p.w.reshape(o, k)
+    # im2col emits patches ordered (dy, dx, c) — (fh, fw, i) reshape matches.
+    w_words = bitpack.pack_pm1(w_flat)
+    bn = BNParams(p.bn_mean, p.bn_var, p.bn_gamma, p.bn_beta)
+    return BConvPacked(w_words=w_words, thr=fold_threshold(bn, cnum=k), k=k)
+
+
+def apply_packed(fp: BConvPacked, a_bits: jnp.ndarray, *, fh: int = 3,
+                 fw: int = 3, maxpool: bool = False, path: str = "mxu",
+                 fuse_nb: bool = True) -> jnp.ndarray:
+    """Packed inference conv on {0,1} int8 NHWC bit feature maps.
+
+    a_bits: (N, H, W, C) {0,1}; im2col patches are packed per pixel and sent
+    through the XNOR kernel. Max-pool (paper: on y_l before NormBinarize)
+    commutes with the monotone eq. 8 threshold, so with fuse_nb we pool the
+    output *bits*: max where the compare is y>=c, min where γ<0 flips it.
+    """
+    n, h, w, c = a_bits.shape
+    patches = _im2col(a_bits, fh, fw)                         # (N,H,W,K)
+    words = bitpack.pack_bits(bitpack.pad_to_pack(patches))   # (N,H,W,Kw)
+    if fuse_nb:
+        out = ops.xnor_matmul(words, fp.w_words, k=fp.k,
+                              thr_c=fp.thr.c, thr_flip=fp.thr.flip, path=path)
+        if maxpool:
+            mx = jax.lax.reduce_window(out, jnp.int8(0), jax.lax.max,
+                                       (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+            mn = jax.lax.reduce_window(out, jnp.int8(1), jax.lax.min,
+                                       (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+            out = jnp.where(fp.thr.flip[None, None, None, :], mn, mx)
+        return out
+    y_l = ops.xnor_matmul(words, fp.w_words, k=fp.k, path=path)
+    if maxpool:
+        y_l = jax.lax.reduce_window(y_l, jnp.iinfo(jnp.int32).min,
+                                    jax.lax.max,
+                                    (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    return y_l
+
+
+# ---------------------------------------------------------------------------
+# First layer: FpDotProduct (paper eq. 7) — 6-bit activations × 2-bit weights
+# ---------------------------------------------------------------------------
+
+class FpConvParams(NamedTuple):
+    w: jnp.ndarray          # (O, FH, FW, I) latent fp
+    bn_mean: jnp.ndarray
+    bn_var: jnp.ndarray
+    bn_gamma: jnp.ndarray
+    bn_beta: jnp.ndarray
+
+
+def fpconv_init(key, in_ch: int, out_ch: int, fh: int = 3, fw: int = 3,
+                dtype=jnp.float32) -> FpConvParams:
+    w = jax.random.normal(key, (out_ch, fh, fw, in_ch), dtype) * 0.1
+    return FpConvParams(w=w,
+                        bn_mean=jnp.zeros((out_ch,), dtype),
+                        bn_var=jnp.ones((out_ch,), dtype),
+                        bn_gamma=jnp.ones((out_ch,), dtype),
+                        bn_beta=jnp.zeros((out_ch,), dtype))
+
+
+def fpconv_apply(p: FpConvParams, x01: jnp.ndarray, *,
+                 binarize_out: bool = True) -> jnp.ndarray:
+    """Paper eq. (7): 6-bit input (rescaled to [−31,31]) × 2-bit weights.
+
+    x01: (N, H, W, C) raw image in [0, 1].
+    """
+    a0 = quantize_input_6bit(x01)
+    w2 = quantize_weight_2bit(p.w)
+    y = jax.lax.conv_general_dilated(
+        a0, jnp.transpose(w2, (1, 2, 3, 0)),
+        window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    z = (y - p.bn_mean) / jnp.sqrt(p.bn_var + 1e-4) * p.bn_gamma + p.bn_beta
+    return binarize_ste(z) if binarize_out else z

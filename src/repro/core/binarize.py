@@ -1,0 +1,82 @@
+"""Binarization with straight-through estimation (training substrate).
+
+The paper is inference-only; to make the framework trainable end-to-end we follow
+its upstream reference (Courbariaux & Bengio 2016, the paper's Ref. 9):
+
+* keep latent real-valued "master" weights,
+* binarize on the forward pass with ``sign`` (paper eq. 4: >=0 → +1),
+* gradient flows straight through where |x| <= 1 (hard-tanh STE).
+
+``binarize_ste`` is the differentiable primitive used by blinear/bconv in training
+mode; inference mode uses the packed bit path (core.bitpack + kernels.ops).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.custom_vjp
+def binarize_ste(x: jnp.ndarray) -> jnp.ndarray:
+    """sign(x) ∈ {−1,+1} with straight-through gradient (clipped at |x|<=1)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _bin_fwd(x):
+    return binarize_ste(x), x
+
+
+def _bin_bwd(x, g):
+    # hard-tanh STE: pass gradient only where the latent weight is in [-1, 1]
+    return (jnp.where(jnp.abs(x) <= 1.0, g, 0.0).astype(g.dtype),)
+
+
+binarize_ste.defvjp(_bin_fwd, _bin_bwd)
+
+
+def binarize_weights(w: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic forward binarization of latent weights (training forward)."""
+    return binarize_ste(w)
+
+
+def clip_latent(w: jnp.ndarray) -> jnp.ndarray:
+    """Clip latent weights to [−1, 1] after the optimizer step (Ref. 9 practice).
+
+    Without this the STE gradient (zero outside [−1,1]) freezes weights forever.
+    """
+    return jnp.clip(w, -1.0, 1.0)
+
+
+def quantize_input_6bit(x: jnp.ndarray) -> jnp.ndarray:
+    """Paper §3.1: first-layer inputs rescaled to [−31, 31], 6-bit fixed point.
+
+    Input is assumed in [0,1] (e.g. CIFAR pixels); output is integer-valued
+    float in [−31, 31] (TPU has no 6-bit dtype; int8 storage, 6-bit range).
+    """
+    return jnp.round(jnp.clip(x, 0.0, 1.0) * 62.0 - 31.0)
+
+
+def quantize_weight_2bit(w: jnp.ndarray) -> jnp.ndarray:
+    """Paper eq. (7): first-layer weights are 2-bit signed {−1, 0, +1} (scaled).
+
+    We quantize latent weights to the 2-bit signed grid {−1,0,+1} by scaling to
+    max|w| and rounding — an STE wraps it for training.
+    """
+    return _quant2_ste(w)
+
+
+@jax.custom_vjp
+def _quant2_ste(w):
+    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+    return jnp.round(jnp.clip(w / scale, -1.0, 1.0)) * scale
+
+
+def _q2_fwd(w):
+    return _quant2_ste(w), None
+
+
+def _q2_bwd(_, g):
+    return (g,)
+
+
+_quant2_ste.defvjp(_q2_fwd, _q2_bwd)

@@ -1,0 +1,119 @@
+"""Bit-packing utilities: the paper's ±1 → {1,0} encoding (§3.1).
+
+The paper encodes +1/−1 as 1/0 so a weight or activation costs one bit. On TPU we
+pack 32 such bits along the *reduction* dimension into a single ``int32`` lane word,
+so an XNOR dot product over K elements becomes K/32 word ops (XNOR + popcount).
+
+Conventions
+-----------
+* ``PACK`` = 32 bits per lane word, packed along the **last** axis.
+* Bit i of word j holds element ``j*32 + i`` (LSB-first), matching
+  ``jnp.packbits``-free arithmetic used below (pure shifts, no host round trip).
+* ±1 encoding: ``bit = (x >= 0)`` — the paper's eq. (4) sign convention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PACK = 32  # bits per packed int32 word
+
+
+def packed_len(k: int) -> int:
+    """Number of int32 words needed for k bits."""
+    return (k + PACK - 1) // PACK
+
+
+def pad_to_pack(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Zero-pad ``axis`` up to a multiple of PACK bits.
+
+    Zero pad bits encode −1; callers that need exact sums must correct via the
+    ``cnum`` compensation of eq. (6) using the *unpadded* K (see normbinarize).
+    For matched padding of both operands, pad bits contribute XNOR(0,0)=1 per pad
+    position, i.e. a constant +n_pad to the popcount, which we subtract in ops.
+    """
+    k = x.shape[axis]
+    rem = (-k) % PACK
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis if axis >= 0 else x.ndim + axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack a {0,1} uint/int array along the last axis into int32 words.
+
+    Input  shape: (..., K)   with K % 32 == 0 (use pad_to_pack first).
+    Output shape: (..., K//32), dtype int32, LSB-first.
+    """
+    k = bits.shape[-1]
+    assert k % PACK == 0, f"pack_bits needs K%32==0, got {k}"
+    b = bits.astype(jnp.uint32).reshape(*bits.shape[:-1], k // PACK, PACK)
+    shifts = jnp.arange(PACK, dtype=jnp.uint32)
+    words = jnp.sum(b << shifts, axis=-1, dtype=jnp.uint32)
+    return words.astype(jnp.int32)
+
+
+def unpack_bits(words: jnp.ndarray, k: int | None = None) -> jnp.ndarray:
+    """Inverse of pack_bits. Output (..., n_words*32) {0,1} int8, truncated to k."""
+    w = words.astype(jnp.uint32)
+    shifts = jnp.arange(PACK, dtype=jnp.uint32)
+    bits = (w[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(*words.shape[:-1], words.shape[-1] * PACK)
+    if k is not None:
+        bits = bits[..., :k]
+    return bits.astype(jnp.int8)
+
+
+def encode_pm1(x: jnp.ndarray) -> jnp.ndarray:
+    """±1-valued (or real) tensor → {0,1} bits via the paper's sign rule (eq. 4)."""
+    return (x >= 0).astype(jnp.int8)
+
+
+def decode_pm1(bits: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """{0,1} bits → ±1 values: 1→+1, 0→−1."""
+    return (bits.astype(dtype) * 2 - 1).astype(dtype)
+
+
+def pack_pm1(x: jnp.ndarray) -> jnp.ndarray:
+    """Real/±1 tensor → packed int32 words (pads the last axis with −1s)."""
+    return pack_bits(pad_to_pack(encode_pm1(x)))
+
+
+def xnor_popcount_words(a_words: jnp.ndarray, w_words: jnp.ndarray) -> jnp.ndarray:
+    """Per-word XNOR+popcount: returns number of agreeing bit positions per word.
+
+    a_words, w_words: int32 arrays of identical shape (..., n_words).
+    Returns int32 (..., n_words) popcounts of ~(a ^ w).
+    """
+    x = jnp.bitwise_xor(a_words, w_words)
+    agree = jnp.bitwise_not(x)
+    return jax.lax.population_count(agree.astype(jnp.uint32)).astype(jnp.int32)
+
+
+def xnor_dot(a_words: jnp.ndarray, w_words: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Paper eq. (5): XnorDotProduct over packed words, correcting for padding.
+
+    a_words: (..., n_words) packed activations
+    w_words: (..., n_words) packed weights (broadcast-compatible)
+    k:       true (unpadded) reduction length
+    Returns y_l = number of agreeing positions among the first k bits (int32).
+
+    Padding bits are 0 in both operands → XNOR=1 each, so subtract n_pad.
+    """
+    n_words = a_words.shape[-1]
+    n_pad = n_words * PACK - k
+    pc = xnor_popcount_words(a_words, w_words).sum(axis=-1)
+    return pc - n_pad
+
+
+def pm1_from_xnor(y_l: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Paper eq. (6): y_lo = 2*y_l − cnum, mapping agree-counts back to ±1 sums."""
+    return 2 * y_l - k
+
+
+def packed_nbytes(shape: tuple[int, ...]) -> int:
+    """HBM bytes for a packed tensor whose *unpacked* last dim is shape[-1]."""
+    return int(np.prod(shape[:-1])) * packed_len(shape[-1]) * 4

@@ -1,0 +1,89 @@
+"""Binary linear layer — the paper's XnorDotProduct (eq. 5) as a JAX module.
+
+Two execution modes:
+
+* ``train``    — differentiable: latent fp weights binarized with the STE,
+  activations binarized with the STE (paper-faithful binary-in/binary-out),
+  computed as a ±1 bf16 matmul (MXU). This is what the end-to-end trainer uses.
+* ``infer``    — packed: weights stored as int32 bit-words, activations packed
+  on the fly, dispatched to the Pallas XNOR kernels with the fused NormBinarize
+  epilogue (paper eq. 8).
+
+Weight layout: (out_features, in_features) so packing is along the reduction
+axis (the last axis), matching kernels/ops.py.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitpack
+from repro.core.binarize import binarize_ste
+from repro.core.normbinarize import BNParams, NBThreshold, fold_threshold
+from repro.kernels import ops
+
+
+class BLinearParams(NamedTuple):
+    """Latent (trainable) parameters of a binary linear layer + its norm."""
+    w: jnp.ndarray          # (out, in) latent fp weights
+    bn_mean: jnp.ndarray    # (out,) running mean (inference BN stats)
+    bn_var: jnp.ndarray     # (out,)
+    bn_gamma: jnp.ndarray   # (out,)
+    bn_beta: jnp.ndarray    # (out,)
+
+
+class BLinearPacked(NamedTuple):
+    """Deployment artifact: packed weights + folded eq. 8 threshold."""
+    w_words: jnp.ndarray    # (out, in//32) int32
+    thr: NBThreshold        # folded c_l / flip
+    k: int                  # true reduction length
+
+
+def init(key, in_features: int, out_features: int, dtype=jnp.float32) -> BLinearParams:
+    w = jax.random.uniform(key, (out_features, in_features), dtype,
+                           minval=-1.0, maxval=1.0)
+    o = out_features
+    return BLinearParams(
+        w=w,
+        bn_mean=jnp.zeros((o,), dtype), bn_var=jnp.ones((o,), dtype),
+        bn_gamma=jnp.ones((o,), dtype), bn_beta=jnp.zeros((o,), dtype))
+
+
+def apply_train(p: BLinearParams, a_pm1: jnp.ndarray, *,
+                binarize_out: bool = True) -> jnp.ndarray:
+    """Differentiable forward: ±1 activations × binarized weights → BN → ±1.
+
+    a_pm1: (..., in) ±1-valued (output of the previous layer's binarize).
+    Returns ±1 activations (or the BN pre-activation if binarize_out=False,
+    used by the final layer, paper Fig. 3 step 3).
+    """
+    wb = binarize_ste(p.w)                                   # ±1, STE grad
+    y = a_pm1 @ wb.T                                         # y_lo domain
+    # inference-style BN with stored stats (training of stats handled by the
+    # trainer via batch statistics; see core/bcnn.py train_step)
+    z = (y - p.bn_mean) / jnp.sqrt(p.bn_var + 1e-4) * p.bn_gamma + p.bn_beta
+    return binarize_ste(z) if binarize_out else z
+
+
+def fold(p: BLinearParams) -> BLinearPacked:
+    """Fold trained params into the deployment artifact (pack + eq. 8)."""
+    k = p.w.shape[1]
+    w_words = bitpack.pack_pm1(p.w)
+    bn = BNParams(p.bn_mean, p.bn_var, p.bn_gamma, p.bn_beta)
+    thr = fold_threshold(bn, cnum=k)
+    return BLinearPacked(w_words=w_words, thr=thr, k=k)
+
+
+def apply_packed(fp: BLinearPacked, a_bits_words: jnp.ndarray, *,
+                 path: str = "mxu", fuse_nb: bool = True) -> jnp.ndarray:
+    """Packed inference forward: packed activations → packed XNOR kernel.
+
+    a_bits_words: (..., in//32) int32 packed activations.
+    Returns {0,1} int8 bits if fuse_nb else raw int32 agree-counts y_l.
+    """
+    if fuse_nb:
+        return ops.xnor_matmul(a_bits_words, fp.w_words, k=fp.k,
+                               thr_c=fp.thr.c, thr_flip=fp.thr.flip, path=path)
+    return ops.xnor_matmul(a_bits_words, fp.w_words, k=fp.k, path=path)

@@ -1,0 +1,73 @@
+"""Comparator-based normalization — the paper's eq. (8) reformulation.
+
+Inference-time batch norm + the ±1↔{1,0} compensation (eq. 6) + sign binarization
+(eq. 4) fold into a single integer threshold compare:
+
+    NormBinarize(y_l, c_l) = 1  if y_l >= c_l else 0,
+
+where ``y_l`` is the raw XNOR agree-count (eq. 5) and ``c_l`` is one precomputed
+constant per output channel.
+
+Derivation (kept explicit because the paper's printed formula has a typo —
+it omits a parenthesis; we re-derive from eqs. 2/4/6):
+
+    BN(y_lo) >= 0
+    ⇔ γ · (y_lo − µ)/sqrt(σ²+ε) + β >= 0
+    ⇔ sign(γ) · (y_lo − µ + β·sqrt(σ²+ε)/γ) >= 0        (divide by |γ|)
+    with y_lo = 2·y_l − cnum (eq. 6):
+    γ>0:  y_l >= (cnum + µ − β·sqrt(σ²+ε)/γ) / 2  =: c_l   (paper's formula)
+    γ<0:  y_l <= c_l  (comparison flips; the paper assumes γ>0 — we keep the
+          general form with a per-channel ``flip`` bit so folding is lossless).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class BNParams(NamedTuple):
+    """Inference-time batch-norm statistics/affine parameters (per channel)."""
+    mean: jnp.ndarray     # µ
+    var: jnp.ndarray      # σ²
+    gamma: jnp.ndarray    # γ
+    beta: jnp.ndarray     # β
+    eps: float = 1e-4
+
+
+class NBThreshold(NamedTuple):
+    """Folded comparator parameters: one integer threshold (+flip) per channel."""
+    c: jnp.ndarray        # threshold on the XNOR agree-count y_l (float; round opt.)
+    flip: jnp.ndarray     # bool: True where γ<0 (comparison direction flips)
+
+
+def fold_threshold(bn: BNParams, cnum: int, rounded: bool = True) -> NBThreshold:
+    """Fold BN params + eq. 6 compensation into the eq. 8 threshold c_l."""
+    denom = jnp.where(jnp.abs(bn.gamma) < 1e-12, 1e-12, bn.gamma)
+    c = (cnum + bn.mean - bn.beta * jnp.sqrt(bn.var + bn.eps) / denom) * 0.5
+    if rounded:
+        # paper: "rounded to the nearest integer for hardware implementation".
+        # We round so the integer compare stays *bit-exact* vs. the real BN:
+        #   γ>0:  y_l >= c      ⇔ y_l >= ceil(c)        (y_l integer)
+        #   γ<0:  y_l <= c      ⇔ y_l <  floor(c)+1 = ~(y_l >= floor(c)+1)
+        # (norm_binarize implements the flip as ~(y_l >= c)).
+        c = jnp.where(bn.gamma >= 0, jnp.ceil(c), jnp.floor(c) + 1.0)
+    return NBThreshold(c=c, flip=bn.gamma < 0)
+
+
+def norm_binarize(y_l: jnp.ndarray, thr: NBThreshold) -> jnp.ndarray:
+    """Paper eq. (8): the fused comparator. Returns {0,1} bits (int8)."""
+    ge = y_l >= thr.c
+    bits = jnp.where(thr.flip, ~ge, ge)
+    return bits.astype(jnp.int8)
+
+
+def batchnorm_inference(y_lo: jnp.ndarray, bn: BNParams) -> jnp.ndarray:
+    """Reference eq. (2) batch norm on the ±1-domain pre-activation (oracle)."""
+    return (y_lo - bn.mean) / jnp.sqrt(bn.var + bn.eps) * bn.gamma + bn.beta
+
+
+def norm_only(y_l: jnp.ndarray, bn: BNParams, cnum: int) -> jnp.ndarray:
+    """Final layer (paper Fig. 3 step 3): Norm without binarize, on agree-counts."""
+    y_lo = 2 * y_l - cnum
+    return batchnorm_inference(y_lo, bn)

@@ -1,0 +1,130 @@
+"""Pallas TPU flash-attention kernel (causal, GQA-aware).
+
+Why it exists (§Perf iteration C3): the jnp blockwise attention keeps its
+online-softmax algebra correct, but every elementwise stage of the score
+pipeline (mask → where → max → exp → correction → weighted sum) can
+materialize a (B, H, q_block, kv_block) f32 tensor in HBM — measured
+~4–5 TB/step on qwen3-8b train_4k, ~45 % of the memory roofline term.
+In this kernel the entire pipeline lives in VMEM: HBM sees exactly Q, K,
+V reads and O writes.
+
+Grid: (batch·q_heads, S/q_block). Each program owns one (q_block, hd)
+query tile and loops over KV tiles with the standard online softmax.
+Causality skips KV tiles entirely above the diagonal via
+``jax.lax.fori_loop`` bounds — unlike the XLA scan formulation, masked-out
+tiles cost zero FLOPs.
+
+GQA: K/V are indexed at kv-head granularity (q head h reads kv head
+h // group) — no repeated-KV materialization.
+
+Block shapes are MXU/VPU aligned: q_block and kv_block multiples of 128
+(lane dim), hd a multiple of 128 for full MXU tiles.
+
+ops.flash_attention is the jit'd wrapper (padding + CPU interpret
+fallback); ref.flash_attention_ref is the pure-jnp oracle;
+tests/test_kernels.py sweeps shapes/dtypes/causality.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, out_ref, *, kv_block: int,
+                  seq_len: int, causal: bool, sm_scale: float):
+    """One (q_block, hd) output tile for one (batch, head) pair.
+
+    q_ref: (1, q_block, hd); k_ref/v_ref: (1, S, hd)  [this head, VMEM]
+    out_ref: (1, q_block, hd)
+    """
+    _, q_block, hd = q_ref.shape
+    qi = pl.program_id(1)
+    q0 = qi * q_block
+    q = q_ref[0].astype(jnp.float32) * sm_scale
+    q_pos = q0 + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 0)
+
+    if causal:
+        # KV tiles strictly above the diagonal are skipped — real FLOP
+        # savings, not masking (the XLA scan can't do this).
+        n_kv = (q0 + q_block + kv_block - 1) // kv_block
+    else:
+        n_kv = (seq_len + kv_block - 1) // kv_block
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.ds(j * kv_block, kv_block), :].astype(jnp.float32)
+        v = v_ref[0, pl.ds(j * kv_block, kv_block), :]
+        sc = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        kv_pos = j * kv_block + jax.lax.broadcasted_iota(
+            jnp.int32, (q_block, kv_block), 1)
+        mask = kv_pos < seq_len
+        if causal:
+            mask &= q_pos >= kv_pos
+        sc = jnp.where(mask, sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        return m_new, l_new, acc * corr[:, None] + pv
+
+    m0 = jnp.full((q_block,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((q_block,), jnp.float32)
+    acc0 = jnp.zeros((q_block, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    out_ref[0] = out.astype(out_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, q_block: int = 512,
+                    kv_block: int = 512,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Hq, S, hd); k, v: (B, Hkv, S, hd), Hq % Hkv == 0.
+
+    Shapes must be pre-padded: S % q_block == 0, S % kv_block == 0,
+    hd MXU-aligned. Returns (B, Hq, S, hd) in q.dtype.
+    """
+    bq, hq, s, hd = q.shape
+    _, hkv, _, _ = k.shape
+    assert hq % hkv == 0 and s % q_block == 0 and s % kv_block == 0
+    group = hq // hkv
+    sm_scale = hd ** -0.5
+
+    grid = (bq * hq, s // q_block)
+
+    def q_index(g0, g1):
+        return (g0, g1, 0)
+
+    def kv_index(g0, g1):
+        # program g0 = b·Hq + h reads kv head (h // group) of batch b
+        b = g0 // hq
+        h = g0 % hq
+        return (b * hkv + h // group, 0, 0)
+
+    qf = q.reshape(bq * hq, s, hd)
+    kf = k.reshape(bq * hkv, s, hd)
+    vf = v.reshape(bq * hkv, s, hd)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, kv_block=kv_block, seq_len=s,
+                          causal=causal, sm_scale=sm_scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, hd),
+                         lambda g0, g1: (g0, g1, 0)),
+            pl.BlockSpec((1, s, hd), kv_index),
+            pl.BlockSpec((1, s, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, hd), q_index),
+        out_shape=jax.ShapeDtypeStruct((bq * hq, s, hd), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(bq, hq, s, hd)

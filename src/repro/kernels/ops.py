@@ -1,0 +1,152 @@
+"""Public jit'd wrappers around the Pallas binary-matmul kernels.
+
+Handles: leading-batch flattening, padding to TPU-aligned tiles, path selection
+(vpu | mxu | xla reference), and automatic interpret=True on non-TPU backends so
+the same call sites work in tests (CPU) and production (TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitpack
+from repro.kernels import ref as kref
+from repro.kernels import xnor_matmul as kern
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_rows(x: jnp.ndarray, mult: int) -> tuple[jnp.ndarray, int]:
+    m = x.shape[0]
+    rem = (-m) % mult
+    if rem:
+        x = jnp.pad(x, ((0, rem),) + ((0, 0),) * (x.ndim - 1))
+    return x, m
+
+
+def _block_for(m: int, default: int, floor: int = 8) -> int:
+    """Pick a block size <= default that keeps padding waste reasonable."""
+    if m >= default:
+        return default
+    b = floor
+    while b * 2 <= m:
+        b *= 2
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("k", "path", "interpret"))
+def xnor_matmul(a_words: jnp.ndarray, w_words: jnp.ndarray, *, k: int,
+                thr_c: jnp.ndarray | None = None,
+                thr_flip: jnp.ndarray | None = None,
+                path: str = "mxu", interpret: bool | None = None) -> jnp.ndarray:
+    """Paper eq. (5) XnorDotProduct: (..., Kw)ᵢₙₜ₃₂ × (N, Kw)ᵢₙₜ₃₂ → (..., N).
+
+    Returns int32 agree-counts y_l, or {0,1} int8 bits when thresholds are given
+    (fused eq. 8 NormBinarize). ``path``: "vpu" (paper-faithful XNOR+popcount),
+    "mxu" (TPU-native unpack→MXU), or "xla" (pure-jnp, no Pallas).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    lead = a_words.shape[:-1]
+    kw = a_words.shape[-1]
+    a2 = a_words.reshape(-1, kw)
+    n = w_words.shape[0]
+
+    if path == "xla":
+        y = kref.xnor_matmul_ref(a2, w_words, k)
+        if thr_c is not None:
+            y = kref.norm_binarize_ref(y, thr_c, thr_flip)
+        return y.reshape(*lead, n)
+
+    bm = _block_for(a2.shape[0], kern.BM)
+    bn = _block_for(n, kern.BN)
+    a2, m_true = _pad_rows(a2, bm)
+    w_p, n_true = _pad_rows(w_words, bn)
+    # pad K-words up to the vpu inner step
+    rem_kw = (-kw) % kern.BKW
+    if rem_kw:
+        a2 = jnp.pad(a2, ((0, 0), (0, rem_kw)))
+        w_p = jnp.pad(w_p, ((0, 0), (0, rem_kw)))
+    c = f = None
+    if thr_c is not None:
+        c = jnp.pad(thr_c.astype(jnp.float32), (0, w_p.shape[0] - n_true),
+                    constant_values=jnp.inf).reshape(1, -1)
+        f = jnp.pad(thr_flip.astype(jnp.int32), (0, w_p.shape[0] - n_true)
+                    ).reshape(1, -1)
+    fn = kern.xnor_matmul_vpu if path == "vpu" else kern.xnor_matmul_mxu
+    y = fn(a2, w_p, k=k, thr_c=c, thr_flip=f, bm=bm, bn=bn, interpret=interpret)
+    y = y[:m_true, :n_true]
+    if thr_c is not None:
+        y = y.astype(jnp.int8)
+    return y.reshape(*lead, n)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def binary_weight_matmul(a: jnp.ndarray, w_words: jnp.ndarray, *, k: int,
+                         scale: jnp.ndarray | None = None,
+                         interpret: bool | None = None) -> jnp.ndarray:
+    """Weight-only binary matmul: real (..., K) × packed (N, Kw) → (..., N).
+
+    The decode-critical path for binary LMs: weights stream HBM→VMEM packed
+    (32× fewer bytes) and are unpacked to ±1 bf16 in VMEM for the MXU.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    lead = a.shape[:-1]
+    kk = a.shape[-1]
+    n, kw = w_words.shape
+    a2 = a.reshape(-1, kk)
+    # pad K to the packed length (activation zeros neutralize pad weight bits)
+    if kk < kw * bitpack.PACK:
+        a2 = jnp.pad(a2, ((0, 0), (0, kw * bitpack.PACK - kk)))
+    bm = _block_for(a2.shape[0], kern.BM)
+    bn = _block_for(n, kern.BN)
+    bkw = kw if kw <= 32 else 32
+    rem_kw = (-kw) % bkw
+    w_p = w_words
+    if rem_kw:
+        w_p = jnp.pad(w_p, ((0, 0), (0, rem_kw)))
+        a2 = jnp.pad(a2, ((0, 0), (0, rem_kw * bitpack.PACK)))
+    a2, m_true = _pad_rows(a2, bm)
+    w_p, n_true = _pad_rows(w_p, bn)
+    s = None
+    if scale is not None:
+        s = jnp.pad(scale.reshape(-1), (0, w_p.shape[0] - n_true))
+    y = kern.binary_weight_matmul(a2, w_p, k=kk, scale=s, bm=bm, bn=bn,
+                                  bkw=bkw, interpret=interpret)
+    return y[:m_true, :n_true].reshape(*lead, n)
+
+
+def pack_weights(w_pm1: jnp.ndarray) -> jnp.ndarray:
+    """(N, K) ±1/real weights → (N, Kw) packed int32 (sign rule, eq. 4)."""
+    return bitpack.pack_pm1(w_pm1)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_block", "kv_block",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, q_block: int = 512,
+                    kv_block: int = 512,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """Flash attention, (B, Hq, S, hd) head-major. Pads S to the block
+    grid; kv-head count may divide q-head count (GQA)."""
+    from repro.kernels import flash_attention as fk
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, hq, s, hd = q.shape
+    blk = max(q_block, kv_block)
+    s_pad = -(-s // blk) * blk
+    if s_pad != s:
+        pad = ((0, 0), (0, 0), (0, s_pad - s), (0, 0))
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    out = fk.flash_attention(q, k, v, causal=causal,
+                             q_block=min(q_block, s_pad),
+                             kv_block=min(kv_block, s_pad),
+                             interpret=interpret)
+    return out[:, :, :s]

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for tests/test_kernels.py: each kernel must be
+allclose (bit-exact for integer paths) to its oracle across a shape/dtype sweep.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitpack
+
+
+def xnor_matmul_ref(a_words: jnp.ndarray, w_words: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Oracle for the packed XNOR matmul.
+
+    a_words: (M, Kw) int32 packed activations
+    w_words: (N, Kw) int32 packed weights
+    k:       true reduction length (bits)
+    Returns (M, N) int32 agree-counts y_l (paper eq. 5).
+    """
+    x = jnp.bitwise_xor(a_words[:, None, :], w_words[None, :, :])
+    agree = jax.lax.population_count(jnp.bitwise_not(x).astype(jnp.uint32))
+    n_pad = a_words.shape[-1] * bitpack.PACK - k
+    return agree.sum(-1).astype(jnp.int32) - n_pad
+
+
+def xnor_matmul_pm1_ref(a_pm1: jnp.ndarray, w_pm1: jnp.ndarray) -> jnp.ndarray:
+    """Same contract in the ±1 domain: y_l = (K + a·wᵀ) / 2 (eqs. 5/6 inverse)."""
+    k = a_pm1.shape[-1]
+    dot = a_pm1.astype(jnp.int32) @ w_pm1.astype(jnp.int32).T
+    return (k + dot) // 2
+
+
+def norm_binarize_ref(y_l: jnp.ndarray, c: jnp.ndarray, flip: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the fused NormBinarize epilogue (paper eq. 8)."""
+    ge = y_l >= c[None, :]
+    return jnp.where(flip[None, :], ~ge, ge).astype(jnp.int8)
+
+
+def binary_weight_matmul_ref(a: jnp.ndarray, w_words: jnp.ndarray, k: int,
+                             scale: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Oracle for the weight-only binary matmul (BitNet-style, beyond-paper).
+
+    a:        (M, K) real activations (bf16/f32)
+    w_words:  (N, Kw) packed ±1 weights
+    scale:    optional (N,) per-output-channel fp scale (XNOR-Net α)
+    Returns (M, K) @ (K, N) with W = ±1 (float matmul oracle).
+
+    Contract: bf16 multiply (MXU-native) with f32 accumulation, matching the
+    Pallas kernel exactly.
+    """
+    w_pm1 = bitpack.decode_pm1(bitpack.unpack_bits(w_words, k), jnp.bfloat16)
+    y = jax.lax.dot_general(a.astype(jnp.bfloat16), w_pm1,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if scale is not None:
+        y = y * scale[None, :]
+    return y.astype(a.dtype)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True) -> jnp.ndarray:
+    """Oracle for the flash-attention kernel: dense softmax attention.
+
+    q: (B, Hq, S, hd); k/v: (B, Hkv, S, hd) with Hq % Hkv == 0.
+    f32 score/softmax math, bf16 probability × V (matching the kernel).
+    """
+    b, hq, s, hd = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    sc = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                    kr.astype(jnp.float32)) * hd ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        sc = jnp.where(mask[None, None], sc, -1e30)
+    m = sc.max(-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    l = p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", (p / l).astype(vr.dtype), vr)
+    return out.astype(q.dtype)

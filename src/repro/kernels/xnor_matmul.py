@@ -1,0 +1,227 @@
+"""Pallas TPU kernels for binary (XNOR) matrix multiplication.
+
+Three kernels, all operating on bit-packed weights (32 weights / int32 word,
+packed along the reduction axis — see core/bitpack.py):
+
+* ``xnor_matmul_vpu_kernel``  — the paper-faithful path: XNOR + popcount on the
+  VPU (the TPU analogue of the paper's LUT-mapped XNOR gates + bit-count logic).
+* ``xnor_matmul_mxu_kernel``  — the TPU-native adaptation: unpack bits to ±1
+  bf16 *inside VMEM* and feed the MXU. Same contract, ~3× higher peak on TPU
+  (see DESIGN.md §2.1 napkin math); weights still move HBM→VMEM packed (32×
+  bandwidth saving), which is the durable part of the paper's insight on TPU.
+* ``binary_weight_matmul_kernel`` — weight-only binarization (real activations ×
+  packed ±1 weights), the decode-critical kernel for binary LMs (beyond-paper).
+
+All kernels optionally fuse the paper's eq. (8) NormBinarize comparator as an
+epilogue so normalization never materializes in HBM.
+
+Block sizes are TPU-aligned (multiples of 8×128 for f32/int32 tiles; MXU dims
+multiples of 128). The public jit'd wrappers with padding live in ops.py; the
+pure-jnp oracles in ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bitpack import PACK
+
+# Default VMEM tile sizes (TPU v5e: 128-lane VPU/MXU, ~16 MiB VMEM/core).
+BM = 128   # output rows per block (sublane-aligned)
+BN = 128   # output cols per block (lane-aligned)
+BKW = 8    # packed words per inner step in the VPU path (8*32 = 256 bits)
+
+
+def _unpack_pm1(words: jnp.ndarray, dtype) -> jnp.ndarray:
+    """(…, n_words) int32 → (…, n_words*32) ±1 values of ``dtype`` (in-VMEM)."""
+    w = words.astype(jnp.uint32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, PACK), 2)
+    bits = (w[:, :, None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(words.shape[0], words.shape[1] * PACK)
+    return (bits.astype(dtype) * 2 - 1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# VPU path: XNOR + popcount (paper eq. 5, bit-exact)
+# ---------------------------------------------------------------------------
+
+def _xnor_vpu_kernel(a_ref, w_ref, c_ref, f_ref, out_ref, *, n_pad_bits: int,
+                     fuse_nb: bool):
+    """One (BM, BN) output tile; full packed-K resident in VMEM.
+
+    a_ref: (BM, Kw) int32   packed activations
+    w_ref: (BN, Kw) int32   packed weights
+    c_ref: (1, BN) float32  NormBinarize thresholds (if fuse_nb)
+    f_ref: (1, BN) int32    comparison-flip mask     (if fuse_nb)
+    out_ref: (BM, BN) int32 agree-counts y_l, or int32 {0,1} bits if fuse_nb
+    """
+    kw = a_ref.shape[-1]
+    n_steps = kw // BKW
+
+    def body(s, acc):
+        a = a_ref[:, pl.ds(s * BKW, BKW)]                      # (BM, BKW)
+        w = w_ref[:, pl.ds(s * BKW, BKW)]                      # (BN, BKW)
+        x = jnp.bitwise_xor(a[:, None, :], w[None, :, :])      # (BM, BN, BKW)
+        agree = jax.lax.population_count(
+            jnp.bitwise_not(x).astype(jnp.uint32)).astype(jnp.int32)
+        return acc + agree.sum(axis=-1)
+
+    acc = jax.lax.fori_loop(
+        0, n_steps, body, jnp.zeros((a_ref.shape[0], w_ref.shape[0]), jnp.int32))
+    y_l = acc - n_pad_bits
+    if fuse_nb:
+        ge = y_l >= c_ref[0][None, :].astype(jnp.float32)
+        bit = jnp.where(f_ref[0][None, :] != 0, ~ge, ge)
+        out_ref[...] = bit.astype(jnp.int32)
+    else:
+        out_ref[...] = y_l
+
+
+def xnor_matmul_vpu(a_words, w_words, *, k: int, thr_c=None, thr_flip=None,
+                    bm: int = BM, bn: int = BN, interpret: bool = False):
+    """Packed XNOR matmul, VPU path. Shapes must be pre-padded to (bm, bn).
+
+    a_words (M, Kw) int32, w_words (N, Kw) int32 → (M, N) int32.
+    With thr_c/thr_flip: fused NormBinarize, output {0,1} int32 bits.
+    """
+    m, kw = a_words.shape
+    n = w_words.shape[0]
+    assert m % bm == 0 and n % bn == 0 and kw % BKW == 0, (m, n, kw)
+    fuse = thr_c is not None
+    if not fuse:  # dummy operands keep one kernel signature
+        thr_c = jnp.zeros((1, n), jnp.float32)
+        thr_flip = jnp.zeros((1, n), jnp.int32)
+    n_pad_bits = kw * PACK - k
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_xnor_vpu_kernel, n_pad_bits=n_pad_bits, fuse_nb=fuse),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kw), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, kw), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(a_words, w_words, thr_c, thr_flip)
+
+
+# ---------------------------------------------------------------------------
+# MXU path: unpack → ±1 bf16 → systolic dot (TPU-native adaptation)
+# ---------------------------------------------------------------------------
+
+def _xnor_mxu_kernel(a_ref, w_ref, c_ref, f_ref, out_ref, *, k: int,
+                     n_pad_bits: int, fuse_nb: bool, acc_dtype):
+    """Same tile contract as the VPU kernel, but compute on the MXU.
+
+    ±1 dot over padded K gives dot_p = dot_true + n_pad (pads agree: (−1)·(−1)).
+    y_l = (k + dot_p − n_pad) / 2.
+    """
+    a_pm1 = _unpack_pm1(a_ref[...], jnp.bfloat16)              # (BM, Kw*32)
+    w_pm1 = _unpack_pm1(w_ref[...], jnp.bfloat16)              # (BN, Kw*32)
+    dot_p = jax.lax.dot_general(
+        a_pm1, w_pm1, (((1,), (1,)), ((), ())),
+        preferred_element_type=acc_dtype)                      # (BM, BN)
+    y_l = (k + dot_p.astype(jnp.int32) - n_pad_bits) // 2
+    if fuse_nb:
+        ge = y_l >= c_ref[0][None, :]
+        bit = jnp.where(f_ref[0][None, :] != 0, ~ge, ge)
+        out_ref[...] = bit.astype(jnp.int32)
+    else:
+        out_ref[...] = y_l
+
+
+def xnor_matmul_mxu(a_words, w_words, *, k: int, thr_c=None, thr_flip=None,
+                    bm: int = BM, bn: int = BN, interpret: bool = False):
+    """Packed XNOR matmul via in-VMEM unpack + MXU dot. Bit-exact vs. the oracle
+    for k <= 2**24 (f32 accumulation of ±1 products is exact in that range)."""
+    m, kw = a_words.shape
+    n = w_words.shape[0]
+    assert m % bm == 0 and n % bn == 0, (m, n)
+    fuse = thr_c is not None
+    if not fuse:
+        thr_c = jnp.zeros((1, n), jnp.float32)
+        thr_flip = jnp.zeros((1, n), jnp.int32)
+    n_pad_bits = kw * PACK - k
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_xnor_mxu_kernel, k=k, n_pad_bits=n_pad_bits,
+                          fuse_nb=fuse, acc_dtype=jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kw), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, kw), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(a_words, w_words, thr_c, thr_flip)
+
+
+# ---------------------------------------------------------------------------
+# Weight-only binary matmul (real activations × packed ±1 weights)
+# ---------------------------------------------------------------------------
+
+def _bw_matmul_kernel(a_ref, w_ref, s_ref, out_ref, *, n_kw_steps: int,
+                      bkw_words: int, use_scale: bool):
+    """Tile: a (BM, K) real, w (BN, Kw) packed. K-chunked unpack+dot to bound VMEM.
+
+    Accumulates in f32; per-output-channel scale (XNOR-Net α) fused at the end.
+    """
+    bm = a_ref.shape[0]
+    bn = w_ref.shape[0]
+
+    def body(s, acc):
+        w_pm1 = _unpack_pm1(w_ref[:, pl.ds(s * bkw_words, bkw_words)],
+                            jnp.bfloat16)                       # (BN, bkw*32)
+        a = a_ref[:, pl.ds(s * bkw_words * PACK, bkw_words * PACK)]
+        return acc + jax.lax.dot_general(
+            a.astype(jnp.bfloat16), w_pm1, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(0, n_kw_steps, body,
+                            jnp.zeros((bm, bn), jnp.float32))
+    if use_scale:
+        acc = acc * s_ref[0][None, :]
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def binary_weight_matmul(a, w_words, *, k: int, scale=None,
+                         bm: int = BM, bn: int = BN, bkw: int = 32,
+                         interpret: bool = False):
+    """Real (M, K) activations × packed (N, Kw) ±1 weights → (M, N).
+
+    K must be a multiple of 32 and padded consistently in both operands
+    (pad activations with zeros — zero activation kills the pad weight bit).
+    bkw: packed words per inner unpack step (bkw*32 = K-chunk; 32 → 1024 bits).
+    """
+    m, kk = a.shape
+    n, kw = w_words.shape
+    assert kk == kw * PACK, (kk, kw)
+    assert m % bm == 0 and n % bn == 0 and kw % bkw == 0, (m, n, kw, bkw)
+    use_scale = scale is not None
+    if not use_scale:
+        scale = jnp.ones((1, n), jnp.float32)
+    else:
+        scale = scale.reshape(1, n).astype(jnp.float32)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_bw_matmul_kernel, n_kw_steps=kw // bkw,
+                          bkw_words=bkw, use_scale=use_scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kk), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, kw), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(a, w_words, scale)

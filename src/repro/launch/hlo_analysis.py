@@ -1,0 +1,506 @@
+"""Trip-count-aware roofline analysis of optimized (post-SPMD) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts the body of every
+``while`` loop (= every ``jax.lax.scan``) **once**. Our models scan over
+layers (and RWKV/Mamba scan over sequence), so XLA's aggregate FLOPs/bytes
+undercount by ~n_layers (observed 13× on yi-6b train_4k). XLA *does* annotate
+each while op with ``backend_config={"known_trip_count":{"n":"…"}}`` in the
+optimized module, so the fix is structural: parse the HLO text into
+computations, walk the call graph from ENTRY, and multiply every
+computation's local costs by the product of enclosing trip counts.
+
+Cost model (documented in EXPERIMENTS.md §Roofline):
+
+* FLOPs — ``dot``: 2·prod(out)·prod(contracting dims); ``convolution``:
+  2·prod(out)·prod(kernel)/out_features; elementwise arithmetic &
+  transcendentals: prod(out); ``reduce``: prod(input). Fusion internals are
+  counted (a fused multiply still executes).
+* HBM bytes — counted per op at *control level* only (entry, while
+  bodies/conds, conditional branches): output bytes + known operand bytes.
+  Fusion internals are NOT counted (fused intermediates never reach HBM) —
+  the fusion op itself accounts for its operands/outputs. Two special cases
+  mirror XLA's in-place semantics: a fusion whose root is ``dynamic-slice``
+  of a parameter reads only the slice; ``dynamic-update-slice`` (fused or
+  not) touches 2× the update size, not the full buffer.
+* Collective link-bytes — per-chip ring model (see ``link_bytes_for``),
+  scaled by the enclosing trip counts like everything else.
+
+All numbers are per-chip: the dry-run lowers with SPMD partitioning, so the
+optimized module is already the single-device program.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
+                "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+# op line inside a computation:  %name = TYPE opcode(...), attrs
+_OP_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->.*\{\s*$")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_BDIMS_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_DIMLABELS_RE = re.compile(r"dim_labels=([\w?]+)_([\w?]+)->([\w?]+)")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "logistic", "rsqrt", "sqrt", "cbrt", "sine", "cosine", "tan", "atan2",
+    "negate", "abs", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "sign", "remainder", "erf", "expm1",
+}
+_BOOKKEEPING = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "rng-bit-generator",
+    "optimization-barrier", "custom-call",
+}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start", "reduce-scatter-start",
+                "all-to-all-start"}
+
+
+def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    """All (dtype, dims) shapes inside a (possibly tuple) type string."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        total += _DTYPE_BYTES[dt] * math.prod(dims) if dims else _DTYPE_BYTES[dt]
+    return total
+
+
+def _nelems(type_str: str) -> int:
+    n = 0
+    for _, dims in _shape_dims(type_str):
+        n += math.prod(dims) if dims else 1
+    return n
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    type_str: str
+    rest: str            # everything after the opening '('
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    ops: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)       # %name -> type str
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def parse_module(hlo_text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo_text.splitlines():
+        if "/*" in line:  # tuple-index comments contain '=' and break _OP_RE
+            line = _COMMENT_RE.sub("", line)
+        m = _COMP_RE.match(line)
+        if m:
+            cur = Computation(name=m.group(2), is_entry=bool(m.group(1)))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            op = Op(name=mo.group(1), opcode=mo.group(3),
+                    type_str=mo.group(2).strip(), rest=mo.group(4))
+            cur.ops.append(op)
+            cur.shapes[op.name] = op.type_str
+    return comps
+
+
+# ---------------------------------------------------------------------------
+# per-op cost primitives
+# ---------------------------------------------------------------------------
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = _nelems(op.type_str)
+    ops_ = _OPERANDS_RE.findall(op.rest)
+    if not ops_:
+        return 0.0
+    lhs_type = comp.shapes.get(ops_[0], "")
+    lhs_shapes = _shape_dims(lhs_type)
+    if not lhs_shapes:
+        return 0.0
+    lhs_dims = lhs_shapes[0][1]
+    cd = _LHS_CDIMS_RE.search(op.rest)
+    contract = 1
+    if cd:
+        for i in cd.group(1).split(","):
+            if i and int(i) < len(lhs_dims):
+                contract *= lhs_dims[int(i)]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    out_elems = _nelems(op.type_str)
+    ops_ = _OPERANDS_RE.findall(op.rest)
+    if len(ops_) < 2:
+        return 0.0
+    rhs_shapes = _shape_dims(comp.shapes.get(ops_[1], ""))
+    if not rhs_shapes:
+        return 0.0
+    rhs = rhs_shapes[0][1]
+    dl = _DIMLABELS_RE.search(op.rest)
+    if dl and len(dl.group(2)) == len(rhs):
+        o_pos = dl.group(2).index("o")
+        ker = math.prod(d for i, d in enumerate(rhs) if i != o_pos)
+    else:
+        ker = math.prod(rhs) / max(rhs)
+    return 2.0 * out_elems * ker
+
+
+def link_bytes_for(op_name: str, nbytes: int, group: int) -> float:
+    """Per-chip ICI traffic of one collective under a ring schedule."""
+    n = max(group, 2)
+    if op_name.startswith("all-gather"):
+        return nbytes * (n - 1) / n
+    if op_name.startswith("all-reduce"):
+        return 2 * nbytes * (n - 1) / n
+    if op_name.startswith("reduce-scatter"):
+        return nbytes * (n - 1)
+    if op_name.startswith("all-to-all"):
+        return nbytes * (n - 1) / n
+    return float(nbytes)       # collective-permute
+
+
+def _collective(op: Op) -> tuple[float, int] | None:
+    """(link_bytes, group_size) for a collective op, else None."""
+    if op.opcode not in _COLLECTIVES:
+        return None
+    nbytes = _shape_bytes(op.type_str)
+    if op.opcode.startswith("all-gather") and op.opcode.endswith("-start"):
+        # -start output tuple repeats (input, output); halve to the output
+        nbytes //= 2
+    g = _GROUPS_RE.search(op.rest)
+    if g:
+        n = len(g.group(1).split(","))
+    else:
+        g2 = _GROUPS2_RE.search(op.rest)
+        n = int(g2.group(2)) if g2 else 2
+    return link_bytes_for(op.opcode, nbytes, n), n
+
+
+def _fusion_param_read_bytes(fcomp: Computation) -> dict[int, int]:
+    """Per-parameter read bytes override for slice-only consumption.
+
+    If parameter i of a fusion computation is consumed *only* by
+    dynamic-slice/slice/gather ops (the scan weight-slice pattern), its read
+    traffic is the slice output, not the whole (L, …) stack.
+    """
+    param_idx: dict[str, int] = {}
+    for op in fcomp.ops:
+        if op.opcode == "parameter":
+            pm = re.match(r"(\d+)", op.rest)
+            if pm:
+                param_idx[op.name] = int(pm.group(1))
+    uses: dict[str, list[Op]] = {p: [] for p in param_idx}
+    for op in fcomp.ops:
+        if op.opcode == "parameter":
+            continue
+        for ref in _OPERANDS_RE.findall(op.rest):
+            if ref in uses:
+                uses[ref].append(op)
+    out: dict[int, int] = {}
+    for pname, consumers in uses.items():
+        if consumers and all(
+                c.opcode in ("dynamic-slice", "slice", "gather")
+                and _OPERANDS_RE.findall(c.rest)[:1] == [pname]
+                for c in consumers):
+            out[param_idx[pname]] = sum(_shape_bytes(c.type_str)
+                                        for c in consumers)
+    return out
+
+
+def _root_opcode(fcomp: Computation) -> str:
+    return fcomp.ops[-1].opcode if fcomp.ops else ""
+
+
+def _dus_update_bytes(fcomp: Computation) -> int | None:
+    """In-place update patterns: charge touched bytes, not the whole buffer.
+
+    dynamic-update-slice → 2× update size; scatter (the one-token KV-cache
+    append) → 2× updates + indices. XLA executes both in place on TPU
+    (buffer donation + alias analysis); the functional HLO type is the full
+    buffer, which would absurdly dominate (89 GB/step on qwen3 decode).
+    """
+    for op in reversed(fcomp.ops):
+        if op.opcode == "dynamic-update-slice":
+            ops_ = _OPERANDS_RE.findall(op.rest)
+            if len(ops_) >= 2:
+                upd = fcomp.shapes.get(ops_[1])
+                if upd:
+                    return 2 * _shape_bytes(upd)
+        if op.opcode == "scatter":
+            ops_ = _OPERANDS_RE.findall(op.rest)
+            if len(ops_) >= 3:
+                idx = fcomp.shapes.get(ops_[1])
+                upd = fcomp.shapes.get(ops_[2])
+                if upd:
+                    return (2 * _shape_bytes(upd)
+                            + (_shape_bytes(idx) if idx else 0))
+    return None
+
+
+# ---------------------------------------------------------------------------
+# module-level analysis
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Analysis:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_link_bytes: float = 0.0
+    coll_counts: dict = field(default_factory=dict)    # op -> dynamic count
+    n_while: int = 0
+    max_trip: int = 1
+    dot_flops: float = 0.0
+    # HBM bytes the Pallas binary kernels keep in VMEM on real TPU: the jnp
+    # fallback materializes bit-unpacked ±1 weights in HBM (int32 →
+    # shift/and → ≥16× larger bf16 output). kernels/xnor_matmul unpacks
+    # inside the K-loop, so those bytes never exist on TPU. Report both:
+    # bytes (raw graph) and bytes − unpack_credit (kernel-adjusted).
+    unpack_credit: float = 0.0
+    # CPU-backend dtype legalization materializes convert(bf16→f32) copies
+    # of dot operands (the TPU MXU consumes bf16 natively — those copies
+    # don't exist on hardware). Credit = f32 write + f32 re-read −
+    # (bf16 re-read the TPU would do) = 2·out − in/… ≈ 2·out bytes.
+    convert_credit: float = 0.0
+
+
+def _is_unpack_fusion(fcomp: Computation, out_bytes: int,
+                      operand_bytes: list[int]) -> bool:
+    """Detect the bit-unpack pattern: int32 words → (shift, and) → ±1 vals."""
+    has_shift = any(op.opcode in ("shift-right-logical", "shift-left")
+                    for op in fcomp.ops)
+    if not has_shift:
+        return False
+    int_in = sum(b for b in operand_bytes)
+    return int_in > 0 and out_bytes >= 8 * int_in
+
+
+_PASSTHRU = {"convert", "bitcast", "copy", "parameter", "constant",
+             "dynamic-slice", "slice", "reshape", "transpose", "broadcast",
+             "get-tuple-element", "tuple"}
+
+
+def _is_bf16_upconvert(fcomp: Computation | None, op: Op,
+                       comp: Computation) -> float:
+    """Return the f32 output bytes if this op/fusion merely widens
+    bf16/f16 → f32 (CPU dot-legalization copies; free on TPU), else 0."""
+    out_shapes = _shape_dims(op.type_str)
+    if len(out_shapes) != 1 or out_shapes[0][0] != "f32":
+        return 0.0
+    out_elems = math.prod(out_shapes[0][1]) if out_shapes[0][1] else 1
+    ops_ = _OPERANDS_RE.findall(op.rest)
+    # find a half-width operand with >= out elems (slices shrink, never grow)
+    half_in = False
+    for ref in ops_:
+        t = comp.shapes.get(ref)
+        if not t:
+            continue
+        for dt, dims in _shape_dims(t):
+            n = math.prod(dims) if dims else 1
+            if dt in ("bf16", "f16") and n >= out_elems:
+                half_in = True
+    if not half_in:
+        return 0.0
+    if op.opcode == "convert":
+        return 2.0 * out_elems * 4
+    if op.opcode == "fusion" and fcomp is not None:
+        body_ops = {o.opcode for o in fcomp.ops}
+        if body_ops <= _PASSTHRU and "convert" in body_ops:
+            return 2.0 * out_elems * 4
+    return 0.0
+
+
+def attribute_bytes(hlo_text: str, top: int = 20) -> list[tuple]:
+    """Per-op HBM-byte attribution with the SAME accounting as
+    analyze_module (DUS/slice/unpack special cases included) — the §Perf
+    loop's profiler. Returns [(bytes, mult, comp, opcode, name, type), …]."""
+    rows: list[tuple] = []
+    analyze_module(hlo_text, _sink=rows)
+    return sorted(rows, reverse=True)[:top]
+
+
+def analyze_module(hlo_text: str, _sink: list | None = None) -> Analysis:
+    comps = parse_module(hlo_text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return Analysis()
+
+    # multiplier per computation, accumulated over call sites
+    mult: dict[str, float] = {c: 0.0 for c in comps}
+    # control[c]: computation's ops execute at HBM level (count bytes there)
+    control: set[str] = {entry.name}
+    res = Analysis()
+
+    # BFS over call edges, propagating multipliers. HLO call graphs are DAGs.
+    stack: list[tuple[str, float]] = [(entry.name, 1.0)]
+    while stack:
+        cname, m = stack.pop()
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        mult[cname] = mult.get(cname, 0.0) + m
+        for op in comp.ops:
+            trip = 1
+            if op.opcode == "while":
+                tm = _TRIP_RE.search(op.rest)
+                trip = int(tm.group(1)) if tm else 1
+                res.n_while += 1
+                res.max_trip = max(res.max_trip, trip)
+                for rx in (_BODY_RE, _COND_RE):
+                    mm = rx.search(op.rest)
+                    if mm:
+                        control.add(mm.group(1))
+                        stack.append((mm.group(1), m * trip))
+                continue
+            if op.opcode == "conditional":
+                bm = _BRANCH_RE.search(op.rest)
+                if bm:
+                    for b in _OPERANDS_RE.findall(bm.group(1)):
+                        control.add(b)
+                        stack.append((b, m))
+                continue
+            if op.opcode == "call":
+                mm = _APPLY_RE.search(op.rest) or _CALLS_RE.search(op.rest)
+                if mm:
+                    control.add(mm.group(1))
+                    stack.append((mm.group(1), m))
+                continue
+            mm = _CALLS_RE.search(op.rest)
+            if mm and op.opcode == "fusion":
+                stack.append((mm.group(1), m))   # fusion: flops-only level
+
+    # Deduplicate multipliers (a comp pushed from several sites accumulated
+    # correctly above because we add at pop; but a comp pushed twice from the
+    # same traversal adds twice — that's the intent: two call sites = 2×).
+    # Second pass: accumulate costs.
+    seen_bytes_for: set[str] = set()
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        at_control = cname in control
+
+        def _charge(nb, m, op, cname=cname):
+            res.bytes += m * nb
+            if _sink is not None and nb:
+                _sink.append((m * nb, m, cname[:42], op.opcode,
+                              op.name[:30], op.type_str[:55]))
+
+        for op in comp.ops:
+            # --- FLOPs (counted everywhere, incl. fusion internals)
+            if op.opcode == "dot":
+                f = _dot_flops(op, comp)
+                res.flops += m * f
+                res.dot_flops += m * f
+            elif op.opcode == "convolution":
+                f = _conv_flops(op, comp)
+                res.flops += m * f
+                res.dot_flops += m * f
+            elif op.opcode in _ELEMENTWISE:
+                res.flops += m * _nelems(op.type_str)
+            elif op.opcode in ("reduce", "reduce-window"):
+                ops_ = _OPERANDS_RE.findall(op.rest)
+                if ops_:
+                    in_t = comp.shapes.get(ops_[0])
+                    res.flops += m * (_nelems(in_t) if in_t
+                                      else _nelems(op.type_str))
+            # --- collectives
+            coll = _collective(op)
+            if coll is not None:
+                lb, _ = coll
+                res.coll_link_bytes += m * lb
+                base = op.opcode.replace("-start", "")
+                res.coll_counts[base] = res.coll_counts.get(base, 0) + m
+            # --- HBM bytes (control level only)
+            if not at_control or op.opcode in _BOOKKEEPING or \
+                    op.opcode in ("while", "conditional", "call") or \
+                    op.opcode.endswith("-done"):
+                continue
+            if op.opcode == "fusion":
+                mm = _CALLS_RE.search(op.rest)
+                fcomp = comps.get(mm.group(1)) if mm else None
+                if fcomp is not None:
+                    dus = _dus_update_bytes(fcomp)
+                    if dus is not None:
+                        _charge(dus, m, op)
+                        continue
+                    overrides = _fusion_param_read_bytes(fcomp)
+                    ops_ = _OPERANDS_RE.findall(op.rest)
+                    out_b = _shape_bytes(op.type_str)
+                    total = out_b
+                    op_bytes = []
+                    for i, ref in enumerate(ops_):
+                        if i in overrides:
+                            total += overrides[i]
+                            op_bytes.append(overrides[i])
+                        else:
+                            t = comp.shapes.get(ref)
+                            if t:
+                                total += _shape_bytes(t)
+                                op_bytes.append(_shape_bytes(t))
+                    _charge(total, m, op)
+                    if _is_unpack_fusion(fcomp, out_b, op_bytes):
+                        # write of the unpacked weights + their later re-read
+                        res.unpack_credit += m * 2 * out_b
+                    else:
+                        res.convert_credit += m * _is_bf16_upconvert(
+                            fcomp, op, comp)
+                    continue
+            if op.opcode == "dynamic-slice":
+                _charge(2 * _shape_bytes(op.type_str), m, op)
+                continue
+            if op.opcode == "dynamic-update-slice":
+                ops_ = _OPERANDS_RE.findall(op.rest)
+                upd = comp.shapes.get(ops_[1]) if len(ops_) > 1 else None
+                _charge(2 * _shape_bytes(upd) if upd
+                        else _shape_bytes(op.type_str), m, op)
+                continue
+            total = _shape_bytes(op.type_str)
+            if op.opcode.endswith("-start"):
+                total //= 2  # start tuples repeat (in, out)
+            for ref in _OPERANDS_RE.findall(op.rest):
+                t = comp.shapes.get(ref)
+                if t:
+                    total += _shape_bytes(t)
+            _charge(total, m, op)
+            if op.opcode == "convert":
+                res.convert_credit += m * _is_bf16_upconvert(None, op, comp)
+    return res

@@ -1,0 +1,1 @@
+"""LM substrate: layers, attention (GQA/MLA), MoE, RWKV-6, Mamba-2, assembly."""

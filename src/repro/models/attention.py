@@ -1,0 +1,252 @@
+"""Attention: GQA/MHA with RoPE, qk-norm, sliding windows, KV cache.
+
+Prefill/training uses a memory-bounded blockwise (flash-style) causal
+attention implemented with ``jax.lax.scan`` over KV blocks and an online
+softmax — peak activation memory is O(S·block) instead of O(S²), which is
+what lets the 32k-sequence dry-run cells fit at compile time.
+
+Decode uses a dense one-token attention over the cache (reduction over S).
+
+Sequence-parallel note: q/k/v enter sharded over heads (TP axis "model");
+the blockwise scan is local, so no collectives are added here.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.parallel.act import constrain
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, dtype=jnp.bfloat16) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": layers.dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "wv": layers.dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "wo": layers.dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.norm_init(hd)
+        p["k_norm"] = layers.norm_init(hd)
+    return p
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B,S,KV,hd) → (B,S,KV*groups,hd) for GQA head sharing."""
+    if groups == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, groups, hd)
+                            ).reshape(b, s, kv * groups, hd)
+
+
+def blockwise_causal_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                               *, block: int = 1024,
+                               q_block: int | None = None,
+                               window: Optional[int] = None,
+                               causal: bool = True) -> jnp.ndarray:
+    """Flash-style attention: scan over KV blocks (optionally × Q blocks)
+    with an online softmax.
+
+    q: (B, S, H, hd); k, v: (B, S, H, hd) (kv already repeated to H heads).
+    Returns (B, S, H, hd).
+
+    q_block=None keeps a single q block (scan over KV only). §Perf
+    iteration C1 measured q-chunking on the production shapes and REFUTED
+    it: the outer q scan re-reads K/V once per q block (+22% HBM bytes on
+    qwen3-8b train_4k) while peak temps didn't move (the online-softmax
+    accumulator was not the peak allocation). The knob stays for
+    genuinely q-bound shapes; default is off.
+    """
+    b, s, h, hd = q.shape
+    if q_block is None:
+        q_block = s
+    scale = hd ** -0.5
+    nb = -(-s // block)
+    pad = nb * block - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nqb = -(-s // q_block)
+    qpad = nqb * q_block - s
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    # head-major layout (§Perf iteration C2): ONE transpose per tensor per
+    # layer here, then every blockwise einsum runs in its native
+    # (B, H, q, k) order — the per-block f32 transpose_copy fusions of the
+    # (b, q, h, k)-ordered formulation were ~650 GB/step on qwen3 train.
+    kb = k.reshape(b, nb, block, h, hd).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nb, block, h, hd).transpose(1, 0, 3, 2, 4)
+    kb = constrain(kb, None, "batch", "model", None, None)
+    vb = constrain(vb, None, "batch", "model", None, None)
+    qb = q.reshape(b, nqb, q_block, h, hd).transpose(1, 0, 3, 2, 4)
+    qb = constrain(qb, None, "batch", "model", None, None)
+
+    def q_step(_, q_inp):
+        qblk, qi = q_inp                          # (B,H,qb,hd), scalar
+        q_pos = qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry                     # (B,H,qb) ×2, (B,H,qb,hd)
+            kblk, vblk, blk_idx = inp             # (B,H,block,hd) ×2, scalar
+            kv_pos = blk_idx * block + jnp.arange(block)
+            sc = jnp.einsum("bhqd,bhkd->bhqk", qblk, kblk,
+                            preferred_element_type=jnp.float32) * scale
+            mask = (kv_pos < s)[None, :]                    # drop pad keys
+            if causal:
+                mask &= q_pos[:, None] >= kv_pos[None, :]
+            if window is not None:
+                mask &= q_pos[:, None] - kv_pos[None, :] < window
+            sc = jnp.where(mask[None, None, :, :], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            # exp materializes once, in bf16 — it feeds the MXU dot as bf16
+            # anyway; l keeps f32 accumulation of the bf16 values
+            p = jnp.exp(sc - m_new[..., None]).astype(vblk.dtype)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.astype(jnp.float32).sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (constrain(jnp.full((b, h, q_block), NEG_INF, jnp.float32),
+                          "batch", "model", None),
+                constrain(jnp.zeros((b, h, q_block), jnp.float32),
+                          "batch", "model", None),
+                constrain(jnp.zeros((b, h, q_block, hd), jnp.float32),
+                          "batch", "model", None, None))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init,
+                                      (kb, vb, jnp.arange(nb)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qb, jnp.arange(nqb)))
+    # (nqb, B, H, q_block, hd) → (B, S, H, hd)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, nqb * q_block, h, hd)
+    return out[:, :s]
+
+
+def gqa_forward(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
+                *, causal: bool = True) -> jnp.ndarray:
+    """Training/prefill attention (no cache). x: (B, S, D)."""
+    b, s, _ = x.shape
+    hd, h, kvh = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    quant = cfg.quant if cfg.quant != "binary" else "binary_weights"
+    # note: the paper keeps the *first* layer's input path higher precision;
+    # for LMs we keep attention activations real even in "binary" mode (the
+    # softmax is meaningless over ±1 logits) — DESIGN.md §4.
+    q = layers.dense(p["wq"], x, quant).reshape(b, s, h, hd)
+    k = layers.dense(p["wk"], x, quant).reshape(b, s, kvh, hd)
+    v = layers.dense(p["wv"], x, quant).reshape(b, s, kvh, hd)
+    if cfg.qk_norm:
+        q = layers.apply_norm(p["q_norm"], q)
+        k = layers.apply_norm(p["k_norm"], k)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    if jax.default_backend() == "tpu" and cfg.window is None:
+        # production path: the Pallas flash kernel — the whole score
+        # pipeline stays in VMEM (§Perf iteration C3) and causal KV tiles
+        # above the diagonal are skipped outright. GQA-native (no repeat).
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal).transpose(0, 2, 1, 3)
+        return layers.dense(p["wo"], out.reshape(b, s, h * hd), quant)
+    k = _repeat_kv(k, h // kvh)
+    v = _repeat_kv(v, h // kvh)
+    # pin (batch-DP, ·, heads-TP, ·) before the blockwise scan
+    q = constrain(q, "batch", None, "model", None)
+    k = constrain(k, "batch", None, "model", None)
+    v = constrain(v, "batch", None, "model", None)
+    out = blockwise_causal_attention(q, k, v, window=cfg.window, causal=causal)
+    return layers.dense(p["wo"], out.reshape(b, s, h * hd), quant)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, S_max, KV, hd)
+    v: jnp.ndarray        # (B, S_max, KV, hd)
+    length: jnp.ndarray   # (B,) int32 — filled prefix length
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> KVCache:
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    return KVCache(
+        k=jnp.zeros((batch, max_len, kvh, hd), dtype),
+        v=jnp.zeros((batch, max_len, kvh, hd), dtype),
+        length=jnp.zeros((batch,), jnp.int32))
+
+
+def gqa_decode_step(p: dict, cfg, x: jnp.ndarray, cache: KVCache,
+                    xattn_kv: jnp.ndarray | None = None
+                    ) -> tuple[jnp.ndarray, KVCache]:
+    """One-token attention against the cache. x: (B, 1, D)."""
+    b = x.shape[0]
+    hd, h, kvh = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    quant = cfg.quant if cfg.quant != "binary" else "binary_weights"
+    pos = cache.length[:, None]                              # (B,1)
+    q = layers.dense(p["wq"], x, quant).reshape(b, 1, h, hd)
+    k = layers.dense(p["wk"], x, quant).reshape(b, 1, kvh, hd)
+    v = layers.dense(p["wv"], x, quant).reshape(b, 1, kvh, hd)
+    if cfg.qk_norm:
+        q = layers.apply_norm(p["q_norm"], q)
+        k = layers.apply_norm(p["k_norm"], k)
+    q = layers.apply_rope(q, pos, cfg.rope_theta)
+    k = layers.apply_rope(k, pos, cfg.rope_theta)
+    # append at each slot's own position (continuous batching: slots progress
+    # independently — a scatter along the sequence dim, one row per slot)
+    rows = jnp.arange(b)
+    knew = cache.k.at[rows, cache.length].set(
+        k[:, 0].astype(cache.k.dtype), mode="drop")
+    vnew = cache.v.at[rows, cache.length].set(
+        v[:, 0].astype(cache.v.dtype), mode="drop")
+    # decode SP: cache stays sequence-sharded over "model" — attention is
+    # local per shard, softmax combines tiny partials (§Perf iteration 1;
+    # head-sharding instead all-gathers the whole cache every layer)
+    knew = constrain(knew, "batch", "model", None, None)
+    vnew = constrain(vnew, "batch", "model", None, None)
+    # grouped-query attention WITHOUT materializing repeated K/V: the cache
+    # is consumed directly at kv-head granularity (§Perf iteration 1b — the
+    # (B,S,H,hd) repeat was 4× the cache bytes per layer, written + read)
+    g = h // kvh
+    qg = q.reshape(b, 1, kvh, g, hd)
+    sc = jnp.einsum("bqkgd,bskd->bqkgs", qg, knew,
+                    preferred_element_type=jnp.float32) * hd ** -0.5
+    sc = constrain(sc, "batch", None, None, None, "model")
+    kv_pos = jnp.arange(knew.shape[1])
+    idx = cache.length[:, None, None, None, None]            # per-slot
+    valid = kv_pos[None, None, None, None, :] <= idx
+    if cfg.window is not None:
+        valid &= kv_pos[None, None, None, None, :] > idx - cfg.window
+    sc = jnp.where(valid, sc, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bqkgs,bskd->bqkgd", w.astype(vnew.dtype), vnew,
+                     preferred_element_type=jnp.float32)
+    out = layers.dense(p["wo"], out.reshape(b, 1, h * hd).astype(x.dtype),
+                       quant)
+    return out, KVCache(k=knew, v=vnew, length=cache.length + 1)
+
+
+def cross_attn_forward(p: dict, cfg, x: jnp.ndarray,
+                       enc_k: jnp.ndarray, enc_v: jnp.ndarray) -> jnp.ndarray:
+    """Cross-attention (Whisper decoder): full, non-causal, cached enc K/V.
+
+    x: (B, S, D); enc_k/enc_v: (B, S_enc, H, hd) precomputed from encoder.
+    """
+    b, s, _ = x.shape
+    hd, h = cfg.head_dim, cfg.n_heads
+    quant = cfg.quant if cfg.quant != "binary" else "binary_weights"
+    q = layers.dense(p["wq"], x, quant).reshape(b, s, h, hd)
+    sc = jnp.einsum("bqhd,bkhd->bqhk", q, enc_k,
+                    preferred_element_type=jnp.float32) * hd ** -0.5
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bqhk,bkhd->bqhd", w.astype(enc_v.dtype), enc_v,
+                     preferred_element_type=jnp.float32)
+    return layers.dense(p["wo"], out.reshape(b, s, h * hd).astype(x.dtype),
+                        quant)

@@ -1,0 +1,185 @@
+"""Shared NN layers for the LM substrate: norms, RoPE, MLPs, embeddings,
+and the quant-aware ``dense`` primitive that carries the paper's technique
+into every architecture.
+
+Parameter layout convention: plain nested dicts; every weight matrix is
+(in_features, out_features) so the reduction axis is axis 0 (column-major
+friendly for TP: shard axis 1 for "split-out", axis 0 for "split-in").
+
+The paper's technique enters through ``dense``:
+
+* quant="none"            → plain bf16 matmul.
+* quant="binary"          → paper-faithful BCNN semantics adapted to LMs:
+    activations *and* weights binarized (STE in training); serving uses
+    packed int32 weights unpacked in-graph (32× fewer weight bytes — the
+    TPU-durable part of the paper's insight, DESIGN.md §2).
+* quant="binary_weights"  → beyond-paper: ±1 weights with XNOR-Net-style
+    per-channel α scale; real activations. This is the mode the §Perf decode
+    hillclimb uses.
+
+Serving artifacts store packed weights as {"w_packed": (out, in/32) int32,
+"alpha": (out,)}; ``dense`` dispatches on the dict keys, so model code is
+identical in both training and deployment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitpack
+from repro.core.binarize import binarize_ste
+from repro.parallel.act import constrain
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> dict:
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * (d_in ** -0.5)
+    return {"w": w.astype(dtype)}
+
+
+def dense_packed_from(w: jnp.ndarray) -> dict:
+    """Fold a trained fp weight into the packed serving artifact."""
+    alpha = jnp.mean(jnp.abs(w.astype(jnp.float32)), axis=0)        # (out,)
+    w_packed = bitpack.pack_pm1(w.astype(jnp.float32).T)            # (out, in/32)
+    return {"w_packed": w_packed, "alpha": alpha}
+
+
+def dense_packed_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> dict:
+    """Packed-layout init (used to build serving param trees abstractly)."""
+    words = bitpack.packed_len(d_in)
+    w_packed = jax.random.randint(key, (d_out, words), jnp.iinfo(jnp.int32).min,
+                                  jnp.iinfo(jnp.int32).max, jnp.int32)
+    return {"w_packed": w_packed, "alpha": jnp.ones((d_out,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# the quant-aware matmul
+# ---------------------------------------------------------------------------
+
+def dense(p: dict, x: jnp.ndarray, quant: str = "none") -> jnp.ndarray:
+    """x: (..., in) → (..., out), honoring the quant mode / param layout."""
+    if "w_packed" in p:  # packed serving artifact (binary modes)
+        wp = p["w_packed"]                                   # (out, in/32)
+        k = x.shape[-1]
+        w_pm1 = bitpack.decode_pm1(bitpack.unpack_bits(wp, k), x.dtype)
+        y = jax.lax.dot_general(x, w_pm1, (((x.ndim - 1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if quant == "binary":
+            # activations were sign-binarized upstream; nothing further.
+            pass
+        y = y * p["alpha"].astype(jnp.float32)
+        return y.astype(x.dtype)
+
+    w = p["w"]
+    if quant == "none":
+        return x @ w.astype(x.dtype)
+    if quant == "binary_weights":
+        alpha = jnp.mean(jnp.abs(w.astype(jnp.float32)), axis=0)
+        wb = binarize_ste(w.astype(jnp.float32))
+        y = x.astype(jnp.float32) @ wb * alpha
+        return y.astype(x.dtype)
+    if quant == "binary":
+        # paper-faithful: binarize activations too (STE both sides).
+        alpha = jnp.mean(jnp.abs(w.astype(jnp.float32)), axis=0)
+        xb = binarize_ste(x.astype(jnp.float32))
+        wb = binarize_ste(w.astype(jnp.float32))
+        y = xb @ wb * alpha
+        return y.astype(x.dtype)
+    raise ValueError(f"unknown quant mode {quant!r}")
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(d: int, norm_type: str = "rmsnorm") -> dict:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p: dict, x: jnp.ndarray, norm_type: str = "rmsnorm",
+               eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                            # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B,S,hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                                  # (B,S,1,hd/2)
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, mlp_type: str = "swiglu",
+             dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        return {"wi": dense_init(ks[0], d, d_ff, dtype),
+                "wg": dense_init(ks[1], d, d_ff, dtype),
+                "wo": dense_init(ks[2], d_ff, d, dtype)}
+    return {"wi": dense_init(ks[0], d, d_ff, dtype),
+            "wo": dense_init(ks[2], d_ff, d, dtype)}
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, mlp_type: str = "swiglu",
+              quant: str = "none") -> jnp.ndarray:
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(dense(p["wg"], x, quant)) * dense(p["wi"], x, quant)
+    else:
+        h = jax.nn.gelu(dense(p["wi"], x, quant))
+    # Megatron TP: hidden is (batch-DP, ·, ffn-TP); without the pin XLA's
+    # SPMD pass drops the batch sharding inside the layer scan.
+    h = constrain(h, "batch", None, "model")
+    return dense(p["wo"], h, quant)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16) -> dict:
+    e = jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+    return {"embedding": e.astype(dtype)}
+
+
+def embed_lookup(p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    # one_hot matmul lowers to a sharding-friendly gather on TPU meshes with
+    # a vocab-sharded table; take() would force an all-gather of the table.
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def logits_head(p: dict, x: jnp.ndarray, quant: str = "none") -> jnp.ndarray:
+    """Final projection: per the paper, the output layer is NOT binarized."""
+    return dense(p, x, "none")

@@ -1,0 +1,184 @@
+"""Mamba-2 (SSD) block — the state-space mixer used by Zamba2 (arXiv:2411.15242).
+
+Selective state space with scalar-per-head decay:
+
+    h_t = exp(Δ_t·A_head)·h_{t−1} + Δ_t·B_t ⊗ x_t          h ∈ R^{P×N}
+    y_t = C_t·h_t + D·x_t
+
+Layout: d_inner = 2·d_model, head dim P=64, N = cfg.ssm_state (64 for
+Zamba2-7B). Training/prefill scans over time; decode is a single state
+update — O(1) per token, which is why zamba2 runs the long_500k cell.
+
+Chunked (blocked) SSD is a §Perf candidate; the scan form is the baseline.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.parallel.act import constrain
+
+HEAD_DIM = 64
+CONV_K = 4
+
+
+def _dims(cfg):
+    d_inner = 2 * cfg.d_model
+    n_heads = d_inner // HEAD_DIM
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def mamba_init(key, cfg, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    d_inner, nh, n = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    conv_dim = d_inner + 2 * n
+    return {
+        "in_proj": layers.dense_init(ks[0], d, 2 * d_inner + 2 * n + nh,
+                                     dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, conv_dim), jnp.float32)
+                   * 0.1).astype(dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),         # A = −exp(a_log)
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": layers.norm_init(d_inner),
+        "out_proj": layers.dense_init(ks[2], d_inner, d, dtype),
+    }
+
+
+class MambaState(NamedTuple):
+    h: jnp.ndarray          # (B, nh, P, N) ssm state
+    conv: jnp.ndarray       # (B, CONV_K−1, conv_dim) conv tail
+
+
+def init_state(cfg, batch: int, dtype=jnp.float32) -> MambaState:
+    d_inner, nh, n = _dims(cfg)
+    return MambaState(
+        h=jnp.zeros((batch, nh, HEAD_DIM, n), dtype),
+        conv=jnp.zeros((batch, CONV_K - 1, d_inner + 2 * n), dtype))
+
+
+def _split_proj(cfg, zxbcdt: jnp.ndarray):
+    d_inner, nh, n = _dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:2 * d_inner + 2 * n]
+    dt = zxbcdt[..., 2 * d_inner + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, conv_w: jnp.ndarray,
+                 tail: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv along time. xbc: (B,S,C); tail: (B,K−1,C)."""
+    xin = jnp.concatenate([tail.astype(xbc.dtype), xbc], axis=1)
+    out = sum(xin[:, i:i + xbc.shape[1], :] * conv_w[i]
+              for i in range(CONV_K))
+    new_tail = xin[:, -(CONV_K - 1):, :]
+    return jax.nn.silu(out), new_tail
+
+
+CHUNK = 64          # blocked-SSD chunk length (§Perf iteration F)
+
+
+def _ssd_chunked(xs, bmat, cmat, dt, decay, h0):
+    """Mamba-2's blocked SSD: matmul form inside CHUNK-long blocks.
+
+    xs: (B,S,nh,P) f32; bmat/cmat: (B,S,N); dt/decay: (B,S,nh);
+    h0: (B,nh,P,N). Scalar-per-head decay a_t makes the factorization
+    exact: with L = cumsum(log a) inside a chunk,
+
+      y_t = Σ_{j≤t} e^{L_t−L_j}·dt_j·(C_t·B_j)·x_j + e^{L_t}·C_t·h0
+      h_C = e^{L_C}·h0 + Σ_j e^{L_C−L_j}·dt_j·B_j⊗x_j
+    """
+    b, s, nh, p_dim = xs.shape
+    n = bmat.shape[-1]
+    nc = s // CHUNK
+    c = CHUNK
+
+    xs_c = xs.reshape(b, nc, c, nh, p_dim).transpose(1, 0, 2, 3, 4)
+    b_c = bmat.reshape(b, nc, c, n).transpose(1, 0, 2, 3)
+    c_c = cmat.reshape(b, nc, c, n).transpose(1, 0, 2, 3)
+    dt_c = dt.reshape(b, nc, c, nh).transpose(1, 0, 2, 3)
+    la = jnp.log(jnp.maximum(decay.reshape(b, nc, c, nh), 1e-38)
+                 ).transpose(1, 0, 2, 3)
+    lcum = jnp.cumsum(la, axis=-2)                    # (nc,B,c,nh) L_t incl.
+    ltot = lcum[..., -1:, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))           # j ≤ t (dt_j, no decay
+    #                                                   on the diagonal term)
+
+    def chunk_step(h, inp):
+        xc, bc, cc, dtc, lc, lt = inp
+        # pairwise decay e^{L_t − L_j}: scalar-per-head ⇒ the exact (c, c)
+        # difference matrix is cheap — no factorization/clamp needed
+        ldiff = lc[:, :, None, :] - lc[:, None, :, :]  # (B,t,j,nh)
+        e_t = jnp.exp(lc)                              # (B,c,nh) ≤ 1
+        g = jnp.einsum("btn,bjn->btj", cc, bc)         # scores, head-shared
+        w = jnp.exp(jnp.where(mask[None, :, :, None], ldiff, -jnp.inf)) \
+            * dtc[:, None, :, :]                       # (B,t,j,nh)
+        y_intra = jnp.einsum("btj,btjh,bjhp->bthp", g, w, xc)
+        y_cross = (jnp.einsum("btn,bhpn->bthp", cc, h)
+                   * e_t[..., None])
+        # state hand-off
+        e_end = jnp.exp(lt[:, 0])                     # (B,nh)
+        kend = jnp.exp(lt - lc) * dtc                 # (B,c,nh)
+        h_new = (e_end[:, :, None, None] * h
+                 + jnp.einsum("bjh,bjhp,bjn->bhpn", kend, xc, bc))
+        return h_new, y_intra + y_cross
+
+    h_fin, ys = jax.lax.scan(chunk_step, h0,
+                             (xs_c, b_c, c_c, dt_c, lcum, ltot))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, nh, p_dim)
+    return y, h_fin
+
+
+def mamba_forward(p: dict, cfg, x: jnp.ndarray, state: MambaState
+                  ) -> tuple[jnp.ndarray, MambaState]:
+    """x: (B, S, D) → (y, new_state). Blocked SSD for S % CHUNK == 0
+    (§Perf iteration F), token scan otherwise (decode)."""
+    b, sl, d = x.shape
+    d_inner, nh, n = _dims(cfg)
+    quant = "binary_weights" if cfg.quant == "binary" else cfg.quant
+    z, xbc, dt = _split_proj(cfg, layers.dense(p["in_proj"], x, quant))
+    xbc, new_tail = _causal_conv(xbc, p["conv_w"], state.conv)
+    xs = xbc[..., :d_inner].reshape(b, sl, nh, HEAD_DIM)
+    bmat = xbc[..., d_inner:d_inner + n]                       # (B,S,N)
+    cmat = xbc[..., d_inner + n:]                              # (B,S,N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    a = -jnp.exp(p["a_log"])                                   # (nh,)
+    decay = jnp.exp(dt * a)                                    # (B,S,nh)
+
+    h0 = constrain(state.h.astype(jnp.float32), "batch", "model", None, None)
+    if sl >= CHUNK and sl % CHUNK == 0:
+        ys_bshp, h_fin = _ssd_chunked(
+            constrain(xs.astype(jnp.float32), "batch", None, "model", None),
+            bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+            dt, decay, h0)
+        y = ys_bshp
+    else:
+        def step(h, inp):
+            xt, bt, ct, dct, dtt = inp
+            # h: (B,nh,P,N)
+            dbx = (dtt[..., None, None] * xt[..., :, None]
+                   * bt[:, None, None, :])                    # (B,nh,P,N)
+            h_new = dct[..., None, None] * h + dbx
+            yt = jnp.einsum("bhpn,bn->bhp", h_new, ct)
+            return h_new, yt
+
+        xs_t = (constrain(xs.transpose(1, 0, 2, 3).astype(jnp.float32),
+                          None, "batch", "model", None),
+                constrain(bmat.transpose(1, 0, 2).astype(jnp.float32),
+                          None, "batch", None),
+                constrain(cmat.transpose(1, 0, 2).astype(jnp.float32),
+                          None, "batch", None),
+                constrain(decay.transpose(1, 0, 2), None, "batch", "model"),
+                constrain(dt.transpose(1, 0, 2), None, "batch", "model"))
+        h_fin, ys = jax.lax.scan(step, h0, xs_t)
+        y = ys.transpose(1, 0, 2, 3)                           # (B,S,nh,P)
+    y = y + p["d_skip"][None, None, :, None] \
+        * xs.astype(jnp.float32)                               # skip
+    y = y.reshape(b, sl, d_inner).astype(x.dtype)
+    y = layers.apply_norm(p["norm"], y * jax.nn.silu(z))
+    out = layers.dense(p["out_proj"], y, quant)
+    return out, MambaState(h=h_fin, conv=new_tail.astype(jnp.float32))

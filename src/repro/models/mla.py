@@ -1,0 +1,160 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+K/V are compressed into a rank-``kv_lora_rank`` latent c_kv plus a single
+shared RoPE key per token; the KV cache stores only (c_kv, k_rope) —
+(r + rope_dim) floats/token instead of 2·H·hd.
+
+Two execution paths:
+* training/prefill — expand c_kv to full K/V and run blockwise attention
+  (compute-optimal at long S, matches the reference formulation).
+* decode — the *absorbed* form: fold W_uk into the query and W_uv into the
+  output so attention runs directly in the latent space; per-step FLOPs
+  drop from O(S·H·hd) to O(S·(r+rope)) — the MLA decode win.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers
+from repro.parallel.act import constrain
+
+
+def mla_init(key, cfg, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    r, rq = cfg.kv_lora_rank, cfg.q_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    h = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    p = {}
+    if rq:
+        p["wq_a"] = layers.dense_init(ks[0], d, rq, dtype)
+        p["q_norm"] = layers.norm_init(rq)
+        p["wq_b"] = layers.dense_init(ks[1], rq, h * (dn + dr), dtype)
+    else:
+        p["wq"] = layers.dense_init(ks[0], d, h * (dn + dr), dtype)
+    p["wkv_a"] = layers.dense_init(ks[2], d, r + dr, dtype)   # c_kv ++ k_rope
+    p["kv_norm"] = layers.norm_init(r)
+    p["wk_b"] = layers.dense_init(ks[3], r, h * dn, dtype)    # W_uk
+    p["wv_b"] = layers.dense_init(ks[4], r, h * dv, dtype)    # W_uv
+    p["wo"] = layers.dense_init(ks[5], h * dv, d, dtype)
+    return p
+
+
+def _queries(p: dict, cfg, x: jnp.ndarray, positions) -> tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    quant = "binary_weights" if cfg.quant == "binary" else cfg.quant
+    if cfg.q_lora_rank:
+        cq = layers.apply_norm(p["q_norm"], layers.dense(p["wq_a"], x, quant))
+        q = layers.dense(p["wq_b"], cq, quant)
+    else:
+        q = layers.dense(p["wq"], x, quant)
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p: dict, cfg, x: jnp.ndarray, positions) -> tuple[jnp.ndarray, jnp.ndarray]:
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    quant = "binary_weights" if cfg.quant == "binary" else cfg.quant
+    ckv_rope = layers.dense(p["wkv_a"], x, quant)             # (B,S,r+dr)
+    c_kv = layers.apply_norm(p["kv_norm"], ckv_rope[..., :r])
+    k_rope = ckv_rope[..., r:][:, :, None, :]                 # (B,S,1,dr)
+    k_rope = layers.apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_forward(p: dict, cfg, x: jnp.ndarray, positions: jnp.ndarray,
+                *, causal: bool = True) -> jnp.ndarray:
+    """Training/prefill path (expanded K/V + blockwise attention)."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    quant = "binary_weights" if cfg.quant == "binary" else cfg.quant
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+    c_kv, k_rope = _latents(p, cfg, x, positions)
+    k_nope = layers.dense(p["wk_b"], c_kv, quant).reshape(b, s, h, dn)
+    v = layers.dense(p["wv_b"], c_kv, quant).reshape(b, s, h, dv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))],
+        axis=-1)
+    # blockwise attention expects equal q/k/v head dims; pad v to dn+dr
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+    q = constrain(q, "batch", None, "model", None)
+    k = constrain(k, "batch", None, "model", None)
+    vp = constrain(vp, "batch", None, "model", None)
+    if jax.default_backend() == "tpu":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            vp.transpose(0, 2, 1, 3), causal=causal).transpose(0, 2, 1, 3)
+    else:
+        out = attention.blockwise_causal_attention(q, k, vp, causal=causal)
+    out = out[..., :dv]
+    return layers.dense(p["wo"], out.reshape(b, s, h * dv), quant)
+
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray     # (B, S_max, r)
+    k_rope: jnp.ndarray   # (B, S_max, dr)
+    length: jnp.ndarray   # (B,)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+        length=jnp.zeros((batch,), jnp.int32))
+
+
+def mla_decode_step(p: dict, cfg, x: jnp.ndarray, cache: MLACache
+                    ) -> tuple[jnp.ndarray, MLACache]:
+    """Absorbed-matmul decode: attention in the latent space.
+
+    scores = q_nopeᵀ·W_uk·c_kv + q_ropeᵀ·k_rope ; out = (w·c_kv)·W_uvᵀ.
+    x: (B, 1, D).
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    quant = "binary_weights" if cfg.quant == "binary" else cfg.quant
+    pos = cache.length[:, None]
+    q_nope, q_rope = _queries(p, cfg, x, pos)                 # (B,1,H,·)
+    c_new, krope_new = _latents(p, cfg, x, pos)               # (B,1,r),(B,1,dr)
+    rows = jnp.arange(b)
+    c_kv = cache.c_kv.at[rows, cache.length].set(
+        c_new[:, 0].astype(cache.c_kv.dtype), mode="drop")
+    k_rope = cache.k_rope.at[rows, cache.length].set(
+        krope_new[:, 0].astype(cache.k_rope.dtype), mode="drop")
+    # decode SP: latent cache sequence-sharded over "model" (§Perf iter 1)
+    c_kv = constrain(c_kv, "batch", "model", None)
+    k_rope = constrain(k_rope, "batch", "model", None)
+
+    # absorb W_uk into q: q_lat (B,1,H,r)
+    wk_b = p["wk_b"]["w"] if "w" in p["wk_b"] else None
+    assert wk_b is not None, "absorbed decode requires fp layout for wk_b"
+    wk = wk_b.reshape(r, h, dn)                               # (r,H,dn)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       wk.astype(jnp.float32))
+    sc = (jnp.einsum("bqhr,bsr->bqhs", q_lat, c_kv.astype(jnp.float32))
+          + jnp.einsum("bqhd,bsd->bqhs", q_rope.astype(jnp.float32),
+                       k_rope.astype(jnp.float32)))
+    sc = constrain(sc, "batch", None, None, "model")
+    sc = sc * (dn + dr) ** -0.5
+    idx = cache.length[:, None, None, None]                   # per-slot
+    valid = jnp.arange(c_kv.shape[1])[None, None, None, :] <= idx
+    sc = jnp.where(valid, sc, attention.NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    o_lat = jnp.einsum("bqhs,bsr->bqhr", w, c_kv.astype(jnp.float32))
+    wv = p["wv_b"]["w"].reshape(r, h, dv)
+    out = jnp.einsum("bqhr,rhd->bqhd", o_lat, wv.astype(jnp.float32))
+    out = layers.dense(p["wo"], out.reshape(b, 1, h * dv).astype(x.dtype),
+                       quant)
+    return out, MLACache(c_kv=c_kv, k_rope=k_rope, length=cache.length + 1)

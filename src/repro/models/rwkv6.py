@@ -1,0 +1,223 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free time mix with
+data-dependent decay + squared-ReLU channel mix.
+
+Time-mix recurrence per head (state S ∈ R^{dk×dv}):
+
+    S_t = diag(w_t)·S_{t−1} + k_tᵀ·v_t
+    o_t = r_t·(S_{t−1} + diag(u)·k_tᵀ·v_t)
+
+with w_t = exp(−exp(w0 + tanh(x_w·A)·B)) — the Finch data-dependent decay.
+Token shift interpolates each branch input between x_t and x_{t−1} with
+learned + data-dependent coefficients (LoRA form, reduced here to the
+learned-μ form; the LoRA rank adds nothing to the systems story).
+
+Implemented as ``jax.lax.scan`` over time (training/prefill) and a one-step
+state update (decode) — long_500k decode is O(1) per token in S.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.parallel.act import constrain
+
+HEAD_SIZE = 64
+DECAY_LORA = 64
+
+
+def rwkv_init(key, cfg, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    h = d // HEAD_SIZE
+    ks = jax.random.split(key, 12)
+    tm = {
+        "mu": jnp.full((5, d), 0.5, jnp.float32),       # shift mix r,k,v,w,g
+        "w0": jnp.zeros((d,), jnp.float32) - 6.0,       # decay bias
+        "wa": (jax.random.normal(ks[0], (d, DECAY_LORA), jnp.float32)
+               * d ** -0.5).astype(dtype),
+        "wb": (jax.random.normal(ks[1], (DECAY_LORA, d), jnp.float32)
+               * DECAY_LORA ** -0.5).astype(dtype),
+        "u": jnp.zeros((h, HEAD_SIZE), jnp.float32),    # bonus
+        "wr": layers.dense_init(ks[2], d, d, dtype),
+        "wk": layers.dense_init(ks[3], d, d, dtype),
+        "wv": layers.dense_init(ks[4], d, d, dtype),
+        "wg": layers.dense_init(ks[5], d, d, dtype),
+        "wo": layers.dense_init(ks[6], d, d, dtype),
+        "ln_x": layers.norm_init(d, "layernorm"),       # per-head group norm
+    }
+    cm = {
+        "mu": jnp.full((2, d), 0.5, jnp.float32),
+        "wk": layers.dense_init(ks[7], d, cfg.d_ff, dtype),
+        "wv": layers.dense_init(ks[8], cfg.d_ff, d, dtype),
+        "wr": layers.dense_init(ks[9], d, d, dtype),
+    }
+    return {"time_mix": tm, "channel_mix": cm}
+
+
+def _shift(x: jnp.ndarray, x_prev: jnp.ndarray | None = None) -> jnp.ndarray:
+    """x_{t−1} along the sequence axis; x_prev seeds t=0 (decode carry)."""
+    if x_prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1]], axis=1)
+
+
+class RWKVState(NamedTuple):
+    s: jnp.ndarray        # (B, H, dk, dv) wkv state
+    tm_prev: jnp.ndarray  # (B, D) last token for time-mix shift
+    cm_prev: jnp.ndarray  # (B, D) last token for channel-mix shift
+
+
+def init_state(cfg, batch: int, dtype=jnp.float32) -> RWKVState:
+    d = cfg.d_model
+    h = d // HEAD_SIZE
+    return RWKVState(
+        s=jnp.zeros((batch, h, HEAD_SIZE, HEAD_SIZE), dtype),
+        tm_prev=jnp.zeros((batch, d), dtype),
+        cm_prev=jnp.zeros((batch, d), dtype))
+
+
+def _branches(tm: dict, cfg, x: jnp.ndarray, xp: jnp.ndarray):
+    """Token-shifted branch inputs → (r, k, v, w, g) per position."""
+    b = x.shape[0]
+    sl = x.shape[1]
+    d = x.shape[2]
+    h = d // HEAD_SIZE
+    quant = "binary_weights" if cfg.quant == "binary" else cfg.quant
+    mu = tm["mu"]
+    xx = xp - x
+    xr, xk, xv, xw, xg = (x + xx * mu[i] for i in range(5))
+    r = layers.dense(tm["wr"], xr, quant).reshape(b, sl, h, HEAD_SIZE)
+    k = layers.dense(tm["wk"], xk, quant).reshape(b, sl, h, HEAD_SIZE)
+    v = layers.dense(tm["wv"], xv, quant).reshape(b, sl, h, HEAD_SIZE)
+    g = jax.nn.silu(layers.dense(tm["wg"], xg, quant))
+    # Finch data-dependent decay (kept fp — DESIGN.md §4: binarizing the
+    # recurrence path has no analogue in the paper and destroys stability)
+    dd = jnp.tanh(xw.astype(jnp.float32) @ tm["wa"].astype(jnp.float32)) \
+        @ tm["wb"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(tm["w0"] + dd))                     # (B,S,D) ∈ (0,1)
+    w = w.reshape(b, sl, h, HEAD_SIZE)
+    return r, k, v, w, g
+
+
+CHUNK = 64          # chunked-wkv block length (§Perf iteration D)
+_CLAMP = 30.0       # overflow guard on factorized per-channel decay
+
+
+def _wkv_chunked(r, k, v, w, u, s0):
+    """Chunk-parallel wkv (GLA-style): matmul form inside CHUNK-long blocks,
+    one state hand-off per block instead of per token.
+
+    r/k/v: (B, S, H, hs) f32; w: (B, S, H, hs) decay ∈ (0,1); u: (H, hs);
+    s0: (B, H, hs_k, hs_v) f32.  Returns (out (B,S,H,hs), s_fin).
+
+    Per chunk with L = cumsum(log w):
+      intra[i,j<i] = Σ_d r_i[d] e^{L[i−1][d] − L[j][d]} k_j[d] · v_j
+      diag         = Σ_d r_i[d] u[d] k_i[d] · v_i
+      cross        = (r_i ⊙ e^{L[i−1]}) · S_chunk
+      S ← diag(e^{L[C]}) S + Σ_j (k_j ⊙ e^{L[C] − L[j]})ᵀ v_j
+    The factorized e^{−L[j]} is clamped at e^30. Regime note: RWKV-6's
+    trained decay (w0 init −6, |log w| ≈ e^{w0+tanh·}) keeps |L| ≪ 30 over
+    a 64-token chunk, so the clamp is dormant in practice; under
+    adversarially strong decay it approximates pairs whose true weight is
+    below e^{L_t−30} — shrink CHUNK if that regime ever matters. (The
+    per-CHANNEL decay makes the exact pairwise-difference form used in
+    mamba2._ssd_chunked an O(c²·hs) tensor — too large here.)
+    """
+    b, s, h, hs = r.shape
+    nc = s // CHUNK
+    c = CHUNK
+
+    def resh(t):
+        return t.reshape(b, nc, c, h, hs).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)   # (nc,B,H,c,hs)
+    lw = jnp.log(jnp.maximum(wc, 1e-38))
+    lcum = jnp.cumsum(lw, axis=-2)                        # L[j] inclusive
+    lprev = lcum - lw                                     # L[j−1]
+    ltot = lcum[..., -1:, :]                              # L[C]
+
+    rr = rc * jnp.exp(lprev)                              # r_i e^{L[i−1]}
+    kk = kc * jnp.exp(jnp.minimum(-lcum, _CLAMP))         # k_j e^{−L[j]}
+    kend = kc * jnp.exp(ltot - lcum)                      # k_j e^{L[C]−L[j]}
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+
+    u_b = u[None, :, None, :]                             # (1,H,1,hs)
+
+    def chunk_step(s_carry, inp):
+        rri, kki, vci, rci, kci, kendi, ltoti = inp
+        att = jnp.einsum("bhid,bhjd->bhij", rri, kki)     # strict lower
+        att = jnp.where(mask, att, 0.0)
+        diag = jnp.sum(rci * u_b * kci, axis=-1)          # (B,H,c) bonus
+        out = (jnp.einsum("bhij,bhjv->bhiv", att, vci)
+               + diag[..., None] * vci
+               + jnp.einsum("bhid,bhdv->bhiv", rri, s_carry))
+        s_new = jnp.exp(ltoti).transpose(0, 1, 3, 2) * s_carry + \
+            jnp.einsum("bhjd,bhjv->bhdv", kendi, vci)
+        return s_new, out
+
+    s_fin, outs = jax.lax.scan(chunk_step, s0,
+                               (rr, kk, vc, rc, kc, kend, ltot))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, s, h, hs)
+    return out, s_fin
+
+
+def time_mix_forward(tm: dict, cfg, x: jnp.ndarray, state: RWKVState
+                     ) -> tuple[jnp.ndarray, RWKVState]:
+    """x: (B, S, D) → (out, new_state).
+
+    S ≥ CHUNK and S % CHUNK == 0 → chunk-parallel matmul form (64× fewer
+    scan steps, MXU-shaped work — §Perf iteration D); else token scan.
+    """
+    b, sl, d = x.shape
+    h = d // HEAD_SIZE
+    quant = "binary_weights" if cfg.quant == "binary" else cfg.quant
+    xp = _shift(x, state.tm_prev)
+    r, k, v, w, g = _branches(tm, cfg, x, xp)
+    u = tm["u"]
+
+    if sl >= CHUNK and sl % CHUNK == 0:
+        s0 = constrain(state.s.astype(jnp.float32),
+                       "batch", None, None, None)
+        outs, s_fin = _wkv_chunked(
+            constrain(r.astype(jnp.float32), "batch", None, "model", None),
+            constrain(k.astype(jnp.float32), "batch", None, "model", None),
+            constrain(v.astype(jnp.float32), "batch", None, "model", None),
+            w.astype(jnp.float32), u, s0)
+        out = outs.reshape(b, sl, d)
+    else:
+        def step(s, inp):
+            rt, kt, vt, wt = inp                              # (B,H,hs) each
+            kv = kt[..., :, None] * vt[..., None, :]          # (B,H,dk,dv)
+            o = jnp.einsum("bhk,bhkv->bhv", rt, s + u[..., None] * kv)
+            s_new = wt[..., None] * s + kv
+            return s_new, o
+
+        xs = tuple(constrain(t, None, "batch", None, None) for t in (
+            r.transpose(1, 0, 2, 3).astype(jnp.float32),
+            k.transpose(1, 0, 2, 3).astype(jnp.float32),
+            v.transpose(1, 0, 2, 3).astype(jnp.float32),
+            w.transpose(1, 0, 2, 3)))
+        s0 = constrain(state.s.astype(jnp.float32),
+                       "batch", None, None, None)
+        s_fin, outs = jax.lax.scan(step, s0, xs)
+        out = outs.transpose(1, 0, 2, 3).reshape(b, sl, d)    # (B,S,D)
+    out = layers.apply_norm(tm["ln_x"], out.astype(x.dtype), "layernorm")
+    out = layers.dense(tm["wo"], out * g.astype(out.dtype), quant)
+    new_state = RWKVState(s=s_fin, tm_prev=x[:, -1, :].astype(jnp.float32),
+                          cm_prev=state.cm_prev)
+    return out, new_state
+
+
+def channel_mix_forward(cm: dict, cfg, x: jnp.ndarray, state: RWKVState
+                        ) -> tuple[jnp.ndarray, RWKVState]:
+    quant = "binary_weights" if cfg.quant == "binary" else cfg.quant
+    xp = _shift(x, state.cm_prev)
+    xx = xp - x
+    xk = x + xx * cm["mu"][0]
+    xr = x + xx * cm["mu"][1]
+    k = jnp.square(jax.nn.relu(layers.dense(cm["wk"], xk, quant)))
+    kv = layers.dense(cm["wv"], k, quant)
+    out = jax.nn.sigmoid(layers.dense(cm["wr"], xr, quant)) * kv
+    return out, state._replace(cm_prev=x[:, -1, :].astype(jnp.float32))

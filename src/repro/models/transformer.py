@@ -1,0 +1,570 @@
+"""Unified model assembly: every assigned architecture builds from here.
+
+Families
+--------
+dense | vlm   : [norm → GQA-attn → norm → MLP] × L
+moe           : [norm → MLA-attn → norm → (dense MLP | shared+routed MoE)] × L
+ssm (rwkv6)   : [norm → time-mix → norm → channel-mix] × L
+hybrid(zamba2): chunks of Mamba-2 blocks with ONE weight-shared GQA+MLP block
+                applied every ``attn_every`` layers (Zamba2's shared block)
+audio(whisper): encoder stack (bidirectional) + decoder stack w/ cross-attn
+
+Layers are weight-stacked and iterated with ``jax.lax.scan`` (+ optional
+remat) so HLO size is O(1) in depth — required for the 512-device dry-runs.
+
+Entry points (all pure functions of (cfg, params, …)):
+    init_params     forward_train     loss_fn     prefill     decode_step
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, mamba2, mla, moe, rwkv6
+from repro.parallel.act import constrain
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# per-family block init
+# ---------------------------------------------------------------------------
+
+def _attn_block_init(key, cfg, dt) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if cfg.attn_type == "mla":
+        attn_p = mla.mla_init(k1, cfg, dt)
+    else:
+        attn_p = attention.attn_init(k1, cfg, dt)
+    return {"ln1": layers.norm_init(cfg.d_model, cfg.norm_type),
+            "attn": attn_p,
+            "ln2": layers.norm_init(cfg.d_model, cfg.norm_type)}
+
+
+def _block_init(key, cfg, layer_kind: str) -> dict:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    if layer_kind == "dense_attn":
+        p = _attn_block_init(ks[0], cfg, dt)
+        p["mlp"] = layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                   cfg.mlp_type, dt)
+        return p
+    if layer_kind == "moe":
+        p = _attn_block_init(ks[0], cfg, dt)
+        p["moe"] = moe.moe_init(ks[1], cfg, dt)
+        return p
+    if layer_kind == "rwkv":
+        p = rwkv6.rwkv_init(ks[0], cfg, dt)
+        p["ln1"] = layers.norm_init(cfg.d_model, cfg.norm_type)
+        p["ln2"] = layers.norm_init(cfg.d_model, cfg.norm_type)
+        return p
+    if layer_kind == "mamba":
+        return {"ln1": layers.norm_init(cfg.d_model, cfg.norm_type),
+                "mamba": mamba2.mamba_init(ks[0], cfg, dt)}
+    if layer_kind == "enc_attn":   # whisper encoder (bidirectional, LN)
+        p = _attn_block_init(ks[0], cfg, dt)
+        p["mlp"] = layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff, "gelu", dt)
+        return p
+    if layer_kind == "dec_xattn":  # whisper decoder (self + cross + mlp)
+        p = _attn_block_init(ks[0], cfg, dt)
+        p["xattn"] = attention.attn_init(ks[1], cfg, dt)
+        p["ln3"] = layers.norm_init(cfg.d_model, cfg.norm_type)
+        p["mlp"] = layers.mlp_init(ks[2], cfg.d_model, cfg.d_ff, "gelu", dt)
+        return p
+    raise ValueError(layer_kind)
+
+
+def _stack_init(key, cfg, layer_kind: str, n: int):
+    """Init n layers and stack leaves along a leading axis (for lax.scan)."""
+    keys = jax.random.split(key, n)
+    per = [_block_init(k, cfg, layer_kind) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+
+def _layer_plan(cfg) -> list[tuple[str, int]]:
+    """[(layer_kind, count)] segments for the decoder stack."""
+    if cfg.family in ("dense", "vlm"):
+        return [("dense_attn", cfg.n_layers)]
+    if cfg.family == "moe":
+        nd = cfg.first_dense_layers
+        return [("dense_attn_mla", nd), ("moe", cfg.n_layers - nd)]
+    if cfg.family == "ssm":
+        return [("rwkv", cfg.n_layers)]
+    if cfg.family == "hybrid":
+        return [("mamba", cfg.n_layers)]
+    if cfg.family == "audio":
+        return [("dec_xattn", cfg.n_layers)]
+    raise ValueError(cfg.family)
+
+
+def init_params(cfg, key) -> dict:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": layers.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": layers.norm_init(cfg.d_model, cfg.norm_type),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = layers.dense_init(ks[1], cfg.d_model,
+                                           cfg.vocab_size, dt)
+    for i, (kind, count) in enumerate(_layer_plan(cfg)):
+        if count == 0:
+            continue
+        k = kind.replace("_mla", "")
+        kk = "dense_attn" if kind == "dense_attn_mla" else kind
+        params[f"stack{i}_{kind}"] = _stack_init(ks[2 + i], cfg, kk, count)
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _block_init(ks[6], cfg, "dense_attn")
+    if cfg.family == "audio":
+        params["enc"] = _stack_init(ks[6], cfg, "enc_attn",
+                                    cfg.n_encoder_layers)
+        params["enc_norm"] = layers.norm_init(cfg.d_model, cfg.norm_type)
+    if cfg.family == "vlm":
+        # stub CLIP frontend: a single projection of precomputed patch embeds
+        params["vision_proj"] = layers.dense_init(ks[6], cfg.d_model,
+                                                  cfg.d_model, dt)
+    if cfg.family == "audio":
+        # stub conv frontend: projection of precomputed frame embeddings
+        params["audio_proj"] = layers.dense_init(ks[7], cfg.d_model,
+                                                 cfg.d_model, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block applies (training / prefill, full-sequence)
+# ---------------------------------------------------------------------------
+
+def _apply_dense_attn(p, cfg, x, positions, causal=True):
+    x = constrain(x, "batch", None, None)
+    h = layers.apply_norm(p["ln1"], x, cfg.norm_type)
+    if cfg.attn_type == "mla":
+        x = x + mla.mla_forward(p["attn"], cfg, h, positions, causal=causal)
+    else:
+        x = x + attention.gqa_forward(p["attn"], cfg, h, positions,
+                                      causal=causal)
+    h = layers.apply_norm(p["ln2"], x, cfg.norm_type)
+    return x + layers.mlp_apply(p["mlp"], h, cfg.mlp_type, cfg.quant)
+
+
+def _apply_moe(p, cfg, x, positions):
+    x = constrain(x, "batch", None, None)
+    h = layers.apply_norm(p["ln1"], x, cfg.norm_type)
+    if cfg.attn_type == "mla":
+        x = x + mla.mla_forward(p["attn"], cfg, h, positions)
+    else:
+        x = x + attention.gqa_forward(p["attn"], cfg, h, positions)
+    h = layers.apply_norm(p["ln2"], x, cfg.norm_type)
+    y, aux = moe.moe_apply(p["moe"], cfg, h)
+    return x + y, aux
+
+
+def _apply_rwkv(p, cfg, x, st: rwkv6.RWKVState):
+    x = constrain(x, "batch", None, None)
+    h = layers.apply_norm(p["ln1"], x, cfg.norm_type)
+    y, st = rwkv6.time_mix_forward(p["time_mix"], cfg, h, st)
+    x = (x + y).astype(x.dtype)
+    h = layers.apply_norm(p["ln2"], x, cfg.norm_type)
+    y, st = rwkv6.channel_mix_forward(p["channel_mix"], cfg, h, st)
+    return (x + y).astype(x.dtype), st
+
+
+def _apply_mamba(p, cfg, x, st: mamba2.MambaState):
+    x = constrain(x, "batch", None, None)
+    h = layers.apply_norm(p["ln1"], x, cfg.norm_type)
+    y, st = mamba2.mamba_forward(p["mamba"], cfg, h, st)
+    return (x + y).astype(x.dtype), st
+
+
+def _maybe_remat(cfg, fn):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (training & prefill share this)
+# ---------------------------------------------------------------------------
+
+def _decoder_stack(cfg, params, x, positions, states=None, enc_kv=None):
+    """Run the decoder layer stack. Returns (x, aux_loss, new_states).
+
+    states: family-dependent pytree of per-layer recurrent states (stacked on
+    a leading layer axis) or None for pure-attention families.
+    """
+    aux_total = jnp.zeros((), jnp.float32)
+    new_states = states
+
+    if cfg.family in ("dense", "vlm"):
+        stack = params["stack0_dense_attn"]
+
+        def body(carry, p):
+            return _maybe_remat(cfg, lambda pp, xx: _apply_dense_attn(
+                pp, cfg, xx, positions))(p, carry), None
+        x, _ = jax.lax.scan(body, x, stack)
+
+    elif cfg.family == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            stack0 = params["stack0_dense_attn_mla"]
+
+            def body0(carry, p):
+                return _maybe_remat(cfg, lambda pp, xx: _apply_dense_attn(
+                    pp, cfg, xx, positions))(p, carry), None
+            x, _ = jax.lax.scan(body0, x, stack0)
+        stack1 = params["stack1_moe"]
+
+        def body1(carry, p):
+            xx, aux = carry
+            fn = _maybe_remat(cfg, lambda pp, h: _apply_moe(pp, cfg, h,
+                                                            positions))
+            y, a = fn(p, xx)
+            return (y, aux + a), None
+        (x, aux_total), _ = jax.lax.scan(body1, (x, aux_total), stack1)
+
+    elif cfg.family == "ssm":
+        stack = params["stack0_rwkv"]
+
+        def body(carry, inp):
+            p, st = inp
+            fn = _maybe_remat(cfg, lambda pp, h, s: _apply_rwkv(pp, cfg, h, s))
+            y, st_new = fn(p, carry, st)
+            return y, st_new
+        x, new_states = jax.lax.scan(body, x, (stack, states))
+
+    elif cfg.family == "hybrid":
+        stack = params["stack0_mamba"]
+        every = cfg.attn_every or cfg.n_layers
+        n_chunks = cfg.n_layers // every
+        chunked = jax.tree.map(
+            lambda a: a.reshape(n_chunks, every, *a.shape[1:]), stack)
+        st_chunked = jax.tree.map(
+            lambda a: a.reshape(n_chunks, every, *a.shape[1:]), states)
+        shared = params["shared_attn"]
+
+        def chunk_body(carry, inp):
+            ps, sts = inp
+
+            def inner(c, i2):
+                p, s = i2
+                fn = _maybe_remat(cfg, lambda pp, h, ss: _apply_mamba(
+                    pp, cfg, h, ss))
+                y, s_new = fn(p, c, s)
+                return y, s_new
+            xx, sts_new = jax.lax.scan(inner, carry, (ps, sts))
+            # the weight-shared attention block (Zamba2)
+            xx = _maybe_remat(cfg, lambda pp, h: _apply_dense_attn(
+                pp, cfg, h, positions))(shared, xx)
+            return xx, sts_new
+        x, new_states = jax.lax.scan(chunk_body, x, (chunked, st_chunked))
+        new_states = jax.tree.map(
+            lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), new_states)
+
+    elif cfg.family == "audio":
+        stack = params["stack0_dec_xattn"]
+        enc_k, enc_v = enc_kv
+
+        def body(carry, inp):
+            p, ek, ev = inp
+
+            def blk(pp, xx):
+                h = layers.apply_norm(pp["ln1"], xx, cfg.norm_type)
+                xx = xx + attention.gqa_forward(pp["attn"], cfg, h, positions)
+                h = layers.apply_norm(pp["ln2"], xx, cfg.norm_type)
+                xx = xx + attention.cross_attn_forward(pp["xattn"], cfg, h,
+                                                       ek, ev)
+                h = layers.apply_norm(pp["ln3"], xx, cfg.norm_type)
+                return xx + layers.mlp_apply(pp["mlp"], h, "gelu", cfg.quant)
+            return _maybe_remat(cfg, blk)(p, carry), None
+        x, _ = jax.lax.scan(body, x, (stack, enc_k, enc_v))
+
+    else:
+        raise ValueError(cfg.family)
+    return x, aux_total, new_states
+
+
+def _encode(cfg, params, frames: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Whisper encoder on stub frame embeddings → per-layer cross K/V."""
+    x = layers.dense(params["audio_proj"], frames, "none")
+    pos = jnp.arange(x.shape[1])[None, :]
+
+    def body(carry, p):
+        h = layers.apply_norm(p["ln1"], carry, cfg.norm_type)
+        carry = carry + attention.gqa_forward(p["attn"], cfg, h, pos,
+                                              causal=False)
+        h = layers.apply_norm(p["ln2"], carry, cfg.norm_type)
+        carry = carry + layers.mlp_apply(p["mlp"], h, "gelu", cfg.quant)
+        return carry, None
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    x = layers.apply_norm(params["enc_norm"], x, cfg.norm_type)
+    # project per-decoder-layer K/V from the shared encoder output
+    b, se, d = x.shape
+    hd, h, kvh = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    quant = "binary_weights" if cfg.quant == "binary" else cfg.quant
+    stack = params["stack0_dec_xattn"]
+
+    def kv_body(_, p):
+        k = layers.dense(p["xattn"]["wk"], x, quant).reshape(b, se, kvh, hd)
+        v = layers.dense(p["xattn"]["wv"], x, quant).reshape(b, se, kvh, hd)
+        k = attention._repeat_kv(k, h // kvh)
+        v = attention._repeat_kv(v, h // kvh)
+        return None, (k, v)
+    _, (enc_k, enc_v) = jax.lax.scan(kv_body, None, stack)
+    return enc_k, enc_v   # (L, B, S_enc, H, hd)
+
+
+def _init_recurrent_states(cfg, batch: int):
+    if cfg.family == "ssm":
+        per = rwkv6.init_state(cfg, batch)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), per)
+    if cfg.family == "hybrid":
+        per = mamba2.init_state(cfg, batch)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), per)
+    return None
+
+
+class Batch(NamedTuple):
+    tokens: jnp.ndarray                 # (B, S) int32
+    targets: jnp.ndarray                # (B, S) int32
+    frontend: jnp.ndarray | None = None  # (B, P, D) stub patch/frame embeds
+
+
+def forward_hidden(cfg, params, batch: Batch):
+    """Full-sequence causal forward → (final hidden states, aux_loss)."""
+    x = layers.embed_lookup(params["embed"], batch.tokens)
+    x = constrain(x, "batch", None, None)
+    enc_kv = None
+    if cfg.family == "vlm" and batch.frontend is not None:
+        pe = layers.dense(params["vision_proj"], batch.frontend, "none")
+        x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+    if cfg.family == "audio":
+        enc_kv = _encode(cfg, params, batch.frontend)
+    pos = jnp.arange(x.shape[1])[None, :]
+    states = _init_recurrent_states(cfg, x.shape[0])
+    x, aux, _ = _decoder_stack(cfg, params, x, pos, states, enc_kv)
+    if cfg.family == "vlm" and batch.frontend is not None:
+        x = x[:, batch.frontend.shape[1]:]                   # text positions
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm_type)
+    return x, aux
+
+
+def forward_train(cfg, params, batch: Batch):
+    """Full-sequence causal forward → (logits, aux_loss). Test/debug path —
+    materializes (B, S, V) logits; production loss uses the chunked CE."""
+    x, aux = forward_hidden(cfg, params, batch)
+    head = params.get("head", {"w": params["embed"]["embedding"].T})
+    logits = layers.logits_head(head, x)
+    return logits, aux
+
+
+LOSS_CHUNK = 512
+
+
+def loss_fn(cfg, params, batch: Batch):
+    """Chunked big-vocab cross-entropy: logits never materialize for the
+    whole sequence — (B, chunk, V) per scan step, rematerialized in the
+    backward pass. One-hot dot instead of take_along_axis keeps the vocab
+    dimension sharded (no all-gather of the logits)."""
+    x, aux = forward_hidden(cfg, params, batch)
+    head = params.get("head", {"w": params["embed"]["embedding"].T})
+    b, s, d = x.shape
+    chunk = min(LOSS_CHUNK, s)
+    nc = s // chunk
+    xc = x[:, :nc * chunk].reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    tc = batch.targets[:, :nc * chunk].reshape(b, nc, chunk).transpose(1, 0, 2)
+    xc = constrain(xc, None, "batch", None, None)
+    tc = constrain(tc, None, "batch", None)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def ce_chunk(xch, tch):
+        xch = constrain(xch, "batch", None, None)
+        logits = layers.logits_head(head, xch).astype(jnp.float32)
+        logits = constrain(logits, "batch", None, "model")
+        logz = jax.nn.logsumexp(logits, axis=-1)                # (B, chunk)
+        onehot = jax.nn.one_hot(tch, logits.shape[-1],
+                                dtype=logits.dtype)
+        gold = jnp.sum(logits * onehot, axis=-1)
+        return jnp.sum(logz - gold)
+
+    def body(carry, inp):
+        xch, tch = inp
+        return carry + ce_chunk(xch, tch), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, tc))
+    nll = total / (b * nc * chunk)
+    return nll + 0.01 * aux, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+class ServeState(NamedTuple):
+    caches: Any          # stacked per-layer KV/MLA caches or recurrent states
+    enc_kv: Any          # whisper cross K/V or None
+    length: jnp.ndarray  # scalar int32 — tokens consumed
+
+
+def init_serve_state(cfg, batch: int, max_len: int) -> ServeState:
+    dt = _dtype(cfg)
+    if cfg.family == "ssm":
+        return ServeState(_init_recurrent_states(cfg, batch), None,
+                          jnp.zeros((), jnp.int32))
+    if cfg.family == "hybrid":
+        # mamba states + one KV cache per application of the weight-shared
+        # attention block (weights shared, caches per position — Zamba2)
+        every = cfg.attn_every or cfg.n_layers
+        n_chunks = cfg.n_layers // every
+        kv_per = attention.init_cache(cfg, batch, max_len, dt)
+        shared_caches = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_chunks, *a.shape)).astype(a.dtype),
+            kv_per)
+        return ServeState({"ssm": _init_recurrent_states(cfg, batch),
+                           "shared_kv": shared_caches}, None,
+                          jnp.zeros((), jnp.int32))
+    if cfg.attn_type == "mla":
+        per = mla.init_cache(cfg, batch, max_len, dt)
+    else:
+        per = attention.init_cache(cfg, batch, max_len, dt)
+    caches = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)).astype(a.dtype),
+        per)
+    return ServeState(caches, None, jnp.zeros((), jnp.int32))
+
+
+def decode_step(cfg, params, state: ServeState, tokens: jnp.ndarray,
+                frontend: jnp.ndarray | None = None):
+    """One decode step with a pre-filled cache. tokens: (B, 1) int32.
+
+    This is the ``serve_step`` lowered by the decode_32k / long_500k cells.
+    """
+    x = layers.embed_lookup(params["embed"], tokens)
+    b = x.shape[0]
+    enc_kv = state.enc_kv
+    if cfg.family == "audio" and enc_kv is None:
+        enc_kv = _encode(cfg, params, frontend)
+
+    if cfg.family in ("ssm", "hybrid"):
+        # recurrent families: decode == 1-step forward through the stack
+        if cfg.family == "ssm":
+            stack = params["stack0_rwkv"]
+
+            def body(carry, inp):
+                p, st = inp
+                y, st2 = _apply_rwkv(p, cfg, carry, st)
+                return y, st2
+            x, new_states = jax.lax.scan(body, x, (stack, state.caches))
+        else:
+            stack = params["stack0_mamba"]
+            every = cfg.attn_every or cfg.n_layers
+            n_chunks = cfg.n_layers // every
+            chunked = jax.tree.map(
+                lambda a: a.reshape(n_chunks, every, *a.shape[1:]), stack)
+            st_ch = jax.tree.map(
+                lambda a: a.reshape(n_chunks, every, *a.shape[1:]),
+                state.caches["ssm"])
+            shared = params["shared_attn"]
+
+            def chunk_body(carry, inp):
+                ps, sts, kv_cache = inp
+
+                def inner(c, i2):
+                    p, s = i2
+                    y, s2 = _apply_mamba(p, cfg, c, s)
+                    return y, s2
+                xx, sts2 = jax.lax.scan(inner, carry, (ps, sts))
+                # weight-shared attention block with its own per-chunk cache
+                h = layers.apply_norm(shared["ln1"], xx, cfg.norm_type)
+                y, kv2 = attention.gqa_decode_step(shared["attn"], cfg, h,
+                                                   kv_cache)
+                xx = xx + y
+                h = layers.apply_norm(shared["ln2"], xx, cfg.norm_type)
+                xx = xx + layers.mlp_apply(shared["mlp"], h, cfg.mlp_type,
+                                           cfg.quant)
+                return xx, (sts2, kv2)
+            x, (new_st, new_kv) = jax.lax.scan(
+                chunk_body, x, (chunked, st_ch, state.caches["shared_kv"]))
+            new_states = {
+                "ssm": jax.tree.map(
+                    lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), new_st),
+                "shared_kv": new_kv}
+        new_state = ServeState(new_states, enc_kv, state.length + 1)
+
+    else:
+        pos = state.length
+        if cfg.family == "moe":
+            nd = cfg.first_dense_layers
+            caches0 = jax.tree.map(lambda a: a[:nd], state.caches)
+            caches1 = jax.tree.map(lambda a: a[nd:], state.caches)
+            stacks = [(params["stack0_dense_attn_mla"], caches0, "dense"),
+                      (params["stack1_moe"], caches1, "moe")]
+        elif cfg.family == "audio":
+            stacks = [(params["stack0_dec_xattn"], state.caches, "xattn")]
+        else:
+            stacks = [(params["stack0_dense_attn"], state.caches, "dense")]
+        new_caches = []
+        for stack, caches, kind in stacks:
+            if kind == "xattn":
+                enc_k, enc_v = enc_kv
+
+                def body(carry, inp):
+                    p, cache, ek, ev = inp
+                    h = layers.apply_norm(p["ln1"], carry, cfg.norm_type)
+                    y, cache2 = attention.gqa_decode_step(p["attn"], cfg, h,
+                                                          cache)
+                    carry = carry + y
+                    h = layers.apply_norm(p["ln2"], carry, cfg.norm_type)
+                    carry = carry + attention.cross_attn_forward(
+                        p["xattn"], cfg, h, ek, ev)
+                    h = layers.apply_norm(p["ln3"], carry, cfg.norm_type)
+                    carry = carry + layers.mlp_apply(p["mlp"], h, "gelu",
+                                                     cfg.quant)
+                    return carry, cache2
+                x, nc = jax.lax.scan(body, x, (stack, caches, enc_k, enc_v))
+            else:
+                def body(carry, inp):
+                    p, cache = inp
+                    h = layers.apply_norm(p["ln1"], carry, cfg.norm_type)
+                    if cfg.attn_type == "mla":
+                        y, cache2 = mla.mla_decode_step(p["attn"], cfg, h,
+                                                        cache)
+                    else:
+                        y, cache2 = attention.gqa_decode_step(p["attn"], cfg,
+                                                              h, cache)
+                    carry = carry + y
+                    h = layers.apply_norm(p["ln2"], carry, cfg.norm_type)
+                    if kind == "moe":
+                        y2, _ = moe.moe_apply(p["moe"], cfg, h)
+                    else:
+                        y2 = layers.mlp_apply(p["mlp"], h, cfg.mlp_type,
+                                              cfg.quant)
+                    return carry + y2, cache2
+                x, nc = jax.lax.scan(body, x, (stack, caches))
+            new_caches.append(nc)
+        if len(new_caches) == 2:
+            merged = jax.tree.map(
+                lambda a, b2: jnp.concatenate([a, b2], axis=0),
+                new_caches[0], new_caches[1])
+        else:
+            merged = new_caches[0]
+        new_state = ServeState(merged, enc_kv, state.length + 1)
+
+    x = layers.apply_norm(params["final_norm"], x, cfg.norm_type)
+    head = params.get("head", {"w": params["embed"]["embedding"].T})
+    logits = layers.logits_head(head, x)
+    return logits, new_state
+
+
+def prefill(cfg, params, tokens: jnp.ndarray,
+            frontend: jnp.ndarray | None = None):
+    """Full-sequence prefill → last-position logits (cache fill elided for
+    the dry-run cells; serving uses decode_step on a ready cache)."""
+    x, _ = forward_hidden(cfg, params,
+                          Batch(tokens=tokens, targets=tokens,
+                                frontend=frontend))
+    head = params.get("head", {"w": params["embed"]["embedding"].T})
+    return layers.logits_head(head, x[:, -1:, :])

@@ -1,0 +1,51 @@
+"""Activation sharding constraints, mesh-ambient and test-safe.
+
+Model code calls ``constrain(x, "batch", None, "model")`` with *logical* axis
+tags; when lowered inside a ``with mesh:`` block the tags resolve to the
+mesh's physical axes (batch → ("pod","data") on multi-pod, ("data",) single-
+pod). Outside any mesh (CPU unit tests) every call is the identity, so the
+model code stays mesh-agnostic.
+
+Without these constraints XLA's SPMD propagation is free to drop the batch
+sharding inside the layer scan (observed: 256-batch activations replicated
+per chip → 160 GB/chip temps on yi-6b train_4k). Constraining the scan
+carry + attention tensors pins DP/TP exactly like MaxText's logical rules.
+"""
+from __future__ import annotations
+
+import jax
+from jax._src import mesh as _mesh_internal
+from jax.sharding import PartitionSpec as P
+
+
+def _ambient_mesh():
+    m = _mesh_internal.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def _resolve(tag, names: set[str]):
+    if tag is None:
+        return None
+    if tag == "batch":
+        dp = tuple(a for a in ("pod", "data") if a in names)
+        return dp if dp else None
+    if tag in names:
+        return tag
+    return None
+
+
+def constrain(x, *tags):
+    """with_sharding_constraint with logical tags; identity w/o a mesh."""
+    m = _ambient_mesh()
+    if m is None or x.ndim != len(tags):
+        return x
+    names = set(m.axis_names)
+    spec = P(*(_resolve(t, names) for t in tags))
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_tree(tree, *tags):
+    return jax.tree.map(lambda a: constrain(a, *tags) if a.ndim == len(tags)
+                        else a, tree)

@@ -1,0 +1,222 @@
+"""Sharding rules: parameter/activation/cache PartitionSpecs for the
+production meshes (DP over ("pod","data"); TP/EP/SP over "model").
+
+Rules are path-regex driven over the parameter pytree, mirroring how
+production frameworks (MaxText/T5X) map logical axes:
+
+    embedding (V, D)                → shard D ("model")   (SP-friendly gather)
+    lm head (D, V)                  → shard V
+    attn wq/wk/wv, mlp wi/wg, MLA
+    up-projections, ssm in_proj     → shard output axis  (column parallel)
+    attn wo, mlp wo, out_proj       → shard input axis   (row parallel)
+    MoE expert stacks (E, ·, ·)     → shard E            (expert parallel)
+    router / norms / small vectors  → replicated
+
+Stacked-layer leading axes (from the lax.scan weight stacks) are padded with
+None automatically: rules address *trailing* dimensions.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+
+# (path_regex, axis_from_end, ) — first match wins. axis_from_end counts the
+# dimension (from the right, 1-based) that gets the "model" axis.
+_RULES: list[tuple[str, int]] = [
+    (r"embed/embedding", 1),            # (V, D): shard D
+    (r"head/w$", 1),                    # (D, V): shard V
+    (r"experts/(wi|wg|wo)(/w_packed)?$", 3),   # (E, din, dout): shard E
+    (r"channel_mix/wv/w$", 2),          # (F, D): row-parallel
+    (r"(wo|out_proj)/w$", 2),           # (F|H·hd, D): row-parallel
+    (r"(wq|wk|wv|wg|wi|wr|wq_a|wq_b|wkv_a|wk_b|wv_b|in_proj|vision_proj|"
+     r"audio_proj)/w$", 1),             # column-parallel
+    (r"/w_packed$", 2),                 # packed (out, in/32): shard out
+    (r"/alpha$", 1),                    # packed per-out-channel scale
+    (r"(wa|wb)$", 0),                   # rwkv decay lora: replicated
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def spec_for(path_s: str, ndim: int, shape, model_size: int,
+             dp: tuple[str, ...] = (), dp_size: int = 1,
+             fsdp_min_size: int = 1 << 20) -> P:
+    """TP spec from the rule table + FSDP over the DP axes.
+
+    FSDP: after the "model" axis is placed, large tensors additionally shard
+    their largest remaining divisible dim over the DP axes (ZeRO-3 — without
+    it the 236B cells cannot fit 16 GB/chip: params+AdamW ≈ 2.8 TB).
+    """
+    spec = [None] * ndim
+    for rx, axis_from_end in _RULES:
+        if re.search(rx, path_s):
+            if axis_from_end == 0:
+                return P()
+            ax = ndim - axis_from_end
+            if 0 <= ax and shape[ax] % model_size == 0:
+                spec[ax] = "model"
+            break
+    # FSDP pass
+    import numpy as _np
+    if dp_size > 1 and int(_np.prod(shape)) >= fsdp_min_size:
+        cands = [i for i in range(ndim)
+                 if spec[i] is None and shape[i] % dp_size == 0]
+        if cands:
+            ax = max(cands, key=lambda i: shape[i])
+            spec[ax] = dp if len(dp) > 1 else dp[0]
+    if all(s is None for s in spec):
+        return P()
+    return P(*spec)
+
+
+def param_specs(params_tree, mesh, *, fsdp: bool = True):
+    """PartitionSpec tree for a (possibly abstract) parameter pytree."""
+    msize = mesh.shape["model"]
+    dp = dp_axes(mesh) if fsdp else ()
+    dsize = 1
+    for a in dp:
+        dsize *= mesh.shape[a]
+
+    def f(path, leaf):
+        return spec_for(_path_str(path), leaf.ndim, leaf.shape, msize,
+                        dp, dsize)
+    return jax.tree_util.tree_map_with_path(f, params_tree)
+
+
+def param_shardings(params_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params_tree, mesh))
+
+
+# ---------------------------------------------------------------------------
+# serving (weight-stationary) shardings
+# ---------------------------------------------------------------------------
+
+def serving_param_specs(params_tree, mesh, *, hbm_budget: float = 12e9):
+    """Weight-stationary decode shardings.
+
+    Training shardings are wrong for serving: ZeRO-3 re-gathers every weight
+    every step, which at batch≤128 decode dwarfs the compute (observed
+    t_coll = 1.48 s/token on qwen3-8b decode_32k — §Perf iteration 1).
+    Serving keeps weights TP-sharded over "model" and REPLICATED over the
+    DP axes — zero weight collectives, per-chip weight reads = params/TP.
+    Only when that doesn't fit the HBM budget (deepseek-v2-236b in bf16)
+    does FSDP stay on as the capacity fallback.
+    """
+    import numpy as _np
+    msize = mesh.shape["model"]
+    per_chip = sum(
+        int(_np.prod(l.shape)) * l.dtype.itemsize
+        for l in jax.tree.leaves(params_tree)) / msize
+    return param_specs(params_tree, mesh, fsdp=per_chip > hbm_budget)
+
+
+def serving_param_shardings(params_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        serving_param_specs(params_tree, mesh))
+
+
+# ---------------------------------------------------------------------------
+# activations / batches / caches
+# ---------------------------------------------------------------------------
+
+def batch_spec(mesh, batch_size: int) -> P:
+    """Shard the global batch over the DP axes when divisible."""
+    dp = dp_axes(mesh)
+    n = 1
+    for a in dp:
+        n *= mesh.shape[a]
+    if batch_size % n == 0:
+        return P(dp)
+    return P()     # e.g. long_500k batch=1 → replicate batch
+
+
+def data_shardings(mesh, batch: int, tree):
+    """ShapeDtypeStruct tree → NamedSharding tree for input batches.
+
+    Dim-0 (global batch) shards over DP axes; other dims replicated.
+    """
+    bspec = batch_spec(mesh, batch)
+
+    def f(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim and leaf.shape[0] == batch and bspec != P():
+            spec[0] = bspec[0] if len(bspec) else None
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(f, tree)
+
+
+def cache_spec(shape: tuple[int, ...], mesh, batch: int) -> P:
+    """KV-cache / recurrent-state sharding.
+
+    Heuristic over trailing dims: shard the *batch* dim over DP when
+    divisible; shard the heads (or latent/feature) dim over "model" when
+    divisible; shard the sequence dim over DP when batch isn't shardable
+    (SP — the long_500k B=1 case). Leading stacked-layer dims replicate.
+    """
+    msize = mesh.shape["model"]
+    dp = dp_axes(mesh)
+    dsize = 1
+    for a in dp:
+        dsize *= mesh.shape[a]
+    spec = [None] * len(shape)
+    used_dp = False
+    # find batch dim = first dim equal to batch (after the layer-stack dim)
+    for i, d in enumerate(shape):
+        if d == batch and i <= 1:
+            if batch % dsize == 0:
+                spec[i] = dp if len(dp) > 1 else dp[0]
+                used_dp = True
+            batch_dim = i
+            break
+    else:
+        batch_dim = -1
+    # model axis: the LARGEST divisible non-batch dim — for KV caches that
+    # is the sequence dim. Sharding S keeps attention local per shard (the
+    # softmax partials are tiny); sharding hd/heads instead forces a
+    # per-layer all-gather of the whole cache (§Perf iteration 1: 41 GB ×
+    # 2 × L per decode step on qwen3-8b decode_32k).
+    cands = [i for i in range(len(shape))
+             if i != batch_dim and spec[i] is None
+             and shape[i] % msize == 0 and shape[i] >= msize]
+    if cands:
+        ax = max(cands, key=lambda i: shape[i])
+        if not used_dp and dsize > 1 and shape[ax] % (msize * dsize) == 0 \
+                and shape[ax] >= 4096:
+            # B=1 long-context: the sequence takes ALL axes (full SP)
+            spec[ax] = (*dp, "model")
+            used_dp = True
+        else:
+            spec[ax] = "model"
+    # SP fallback: a long sequence dim takes the DP axes if batch couldn't
+    if not used_dp and dsize > 1:
+        for i, d in enumerate(shape):
+            if spec[i] is None and i != batch_dim and d % dsize == 0 \
+                    and d >= 4096:
+                spec[i] = dp if len(dp) > 1 else dp[0]
+                break
+    return P(*spec)
+
+
+def state_shardings(state_tree, mesh, batch: int):
+    def f(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, cache_spec(leaf.shape, mesh, batch))
+    return jax.tree.map(f, state_tree)

@@ -1,0 +1,85 @@
+"""Fold trained weights into the packed serving artifact (the paper's
+deployment form, applied to LMs).
+
+Every large projection becomes {"w_packed": (out, in/32) int32, "alpha":
+(out,)} — 1 bit/weight + one fp scale per output channel (XNOR-Net α). Per
+the paper's first/last-layer rule, the embedding, LM head, MoE router,
+norms, and modality frontends stay full precision.
+
+``layers.dense`` dispatches on the "w_packed" key, so the model code is
+unchanged between training and serving. On TPU the packed weights stream
+HBM→VMEM at 1/16th the bf16 bytes and unpack in VMEM (kernels/xnor_matmul
+``binary_weight_matmul``); the jnp fallback unpacks in-graph (the dry-run
+charges that correctly via hlo_analysis's unpack-credit — see DESIGN.md).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitpack
+
+# paths that must stay full precision (paper §3.1: first layer fp; §3.3:
+# output layer Norm-only; router = precision-critical like the first layer)
+_KEEP_FP = re.compile(
+    r"embed|head|router|vision_proj|audio_proj|wk_b|wv_b")
+# wk_b/wv_b: MLA's absorbed-matmul decode folds these into q/out — they must
+# stay in fp layout (mla.mla_decode_step).
+
+
+def _pack_leaf(w: jnp.ndarray) -> dict:
+    """(…, in, out) fp weights → packed artifact (leading dims = layer
+    scan stacks / expert stacks, vmapped)."""
+    if w.ndim == 2:
+        alpha = jnp.mean(jnp.abs(w.astype(jnp.float32)), axis=0)
+        wp = bitpack.pack_pm1(w.astype(jnp.float32).T)        # (out, in/32)
+        return {"w_packed": wp, "alpha": alpha}
+    inner = jax.vmap(_pack_leaf)(w.astype(jnp.float32))
+    return {"w_packed": inner["w_packed"], "alpha": inner["alpha"]}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "name",
+                                                   getattr(p, "idx", p)))))
+    return "/".join(parts)
+
+
+def pack_params_for_serving(params: dict) -> dict:
+    """Replace eligible {"w": …} projections with packed artifacts."""
+    def eligible(w, path):
+        return (w.ndim >= 2 and not _KEEP_FP.search(path)
+                and w.shape[-2] % bitpack.PACK == 0 and w.shape[-2] >= 256)
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            if set(node) == {"w"} and eligible(node["w"], path):
+                return _pack_leaf(node["w"])
+            out = {}
+            for k, v in node.items():
+                if k in ("wi", "wg", "wo") and hasattr(v, "ndim") \
+                        and v.ndim in (3, 4) and eligible(v, f"{path}/{k}"):
+                    out[k] = _pack_leaf(v)        # MoE expert stacks (E,·,·)
+                else:
+                    out[k] = walk(v, f"{path}/{k}")
+            return out
+        return node
+    return walk(params, "")
+
+
+def packed_fraction(params: dict) -> float:
+    """Fraction of parameter count now stored at 1 bit (reporting)."""
+    import numpy as np
+    packed = total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        n = int(np.prod(leaf.shape))
+        p = _path_str(path)
+        if p.endswith("w_packed"):
+            packed += n * bitpack.PACK
+            total += n * bitpack.PACK
+        elif not p.endswith("alpha"):
+            total += n
+    return packed / max(total, 1)

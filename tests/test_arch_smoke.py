@@ -1,0 +1,103 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train-grad
++ one decode step on CPU; asserts shapes and no NaNs (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer
+
+
+def _batch(cfg, batch=2, seq=16):
+    key = jax.random.PRNGKey(0)
+    tokens = jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+    fe = None
+    if cfg.family == "vlm":
+        fe = jax.random.normal(key, (batch, cfg.frontend_seq, cfg.d_model),
+                               jnp.bfloat16)
+    if cfg.family == "audio":
+        fe = jax.random.normal(key, (batch, cfg.encoder_seq, cfg.d_model),
+                               jnp.bfloat16)
+    return transformer.Batch(tokens=tokens, targets=tokens, frontend=fe)
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_forward_shapes_no_nan(arch):
+    cfg = configs.get_config(arch, smoke=True)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(1))
+    batch = _batch(cfg)
+    logits, aux = transformer.forward_train(cfg, params, batch)
+    assert logits.shape == (2, 16, cfg.vocab_size), logits.shape
+    assert not np.any(np.isnan(np.asarray(logits, jnp.float32)))
+    assert not np.isnan(float(aux))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_train_step_grad_finite(arch):
+    cfg = configs.get_config(arch, smoke=True)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(2))
+    batch = _batch(cfg)
+
+    def loss(p):
+        l, _ = transformer.loss_fn(cfg, p, batch)
+        return l
+
+    val, grads = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(val)), val
+    flat = jax.tree.leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g, jnp.float32)))
+               for g in flat if g.dtype != jnp.int32)
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_decode_step(arch):
+    cfg = configs.get_config(arch, smoke=True)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(3))
+    b, max_len = 2, 32
+    state = transformer.init_serve_state(cfg, b, max_len)
+    fe = _batch(cfg, b).frontend
+    tok = jnp.zeros((b, 1), jnp.int32)
+    for _ in range(3):
+        logits, state = transformer.decode_step(cfg, params, state, tok, fe)
+        tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    assert logits.shape == (b, 1, cfg.vocab_size)
+    assert not np.any(np.isnan(np.asarray(logits, jnp.float32)))
+    assert int(state.length) == 3
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "rwkv6-3b", "zamba2-7b"])
+def test_binary_quant_modes(arch):
+    """The paper's technique as a config knob (DESIGN.md §4)."""
+    for quant in ("binary", "binary_weights"):
+        cfg = configs.get_config(arch, smoke=True, quant=quant)
+        params = transformer.init_params(cfg, jax.random.PRNGKey(4))
+        logits, _ = transformer.forward_train(cfg, params, _batch(cfg))
+        assert not np.any(np.isnan(np.asarray(logits, jnp.float32))), quant
+
+
+def test_full_configs_match_assignment():
+    """Spot-check the exact published numbers against the assignment table."""
+    c = configs.get_config("deepseek-v2-236b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab_size) == \
+        (60, 5120, 128, 102400)
+    assert (c.n_experts, c.top_k, c.kv_lora_rank) == (160, 6, 512)
+    c = configs.get_config("qwen3-8b")
+    assert (c.n_layers, c.d_model, c.n_kv_heads, c.d_ff) == (36, 4096, 8, 12288)
+    assert c.qk_norm
+    c = configs.get_config("rwkv6-3b")
+    assert c.attn_type == "none" and c.sub_quadratic
+    c = configs.get_config("zamba2-7b")
+    assert c.ssm_state == 64 and c.sub_quadratic
+    c = configs.get_config("whisper-medium")
+    assert c.n_encoder_layers == 24 and c.norm_type == "layernorm"
+
+
+def test_param_counts_plausible():
+    """param_count() should land near the published model sizes (±40%)."""
+    expect = {"deepseek-v2-lite-16b": 16e9, "deepseek-v2-236b": 236e9,
+              "qwen3-8b": 8e9, "yi-6b": 6e9, "glm4-9b": 9e9,
+              "phi4-mini-3.8b": 3.8e9, "zamba2-7b": 7e9, "rwkv6-3b": 3e9}
+    for arch, n in expect.items():
+        got = configs.get_config(arch).param_count()
+        assert 0.6 * n < got < 1.5 * n, (arch, got, n)

@@ -1,0 +1,67 @@
+"""The paper's BCNN end to end: training graph ≡ eval graph ≡ packed
+deployment graph (XNOR + fused eq. 8 comparators)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bcnn
+
+
+@pytest.fixture(scope="module")
+def trained():
+    params = bcnn.init(jax.random.PRNGKey(0))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4, 32, 32, 3))
+    y = jnp.array([0, 1, 2, 3])
+    # a couple of steps so BN stats move off their init
+    step = jax.jit(lambda p, x, y: jax.value_and_grad(
+        bcnn.loss_fn, has_aux=True)(p, x, y))
+    for _ in range(2):
+        (_, stats), grads = step(params, x, y)
+        params = jax.tree.map(lambda p, g: p - 1e-2 * g, params, grads)
+        params = bcnn.update_running_stats(params, stats)
+    return params, x
+
+
+def test_forward_train_shapes_and_grads(trained):
+    params, x = trained
+    logits, stats = bcnn.forward_train(params, x)
+    assert logits.shape == (4, 10)
+    assert len(stats) == 9                      # 6 conv + 3 fc norms
+    (_, _), grads = jax.value_and_grad(bcnn.loss_fn, has_aux=True)(
+        params, x, jnp.array([0, 1, 2, 3]))
+    # STE: binary conv weights must receive nonzero gradient
+    assert float(jnp.abs(grads.convs[0].w).sum()) > 0
+    assert float(jnp.abs(grads.fcs[0].w).sum()) > 0
+
+
+def test_eval_packed_agreement(trained):
+    """Deployment (packed XNOR + comparators) ≡ fp eval forward, top-1."""
+    params, x = trained
+    packed = bcnn.fold_model(params)
+    le = bcnn.forward_eval(params, x)
+    lp = bcnn.forward_packed(packed, x, path="xla")
+    np.testing.assert_array_equal(np.argmax(np.asarray(le), -1),
+                                  np.argmax(np.asarray(lp), -1))
+    # logits agree to BN-arithmetic tolerance (integer y_l is exact; the
+    # final Norm is fp)
+    np.testing.assert_allclose(np.asarray(le), np.asarray(lp),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("path", ["xla", "mxu", "vpu"])
+def test_packed_paths_agree(trained, path):
+    params, x = trained
+    packed = bcnn.fold_model(params)
+    ref = bcnn.forward_packed(packed, x[:2], path="xla")
+    out = bcnn.forward_packed(packed, x[:2], path=path)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_binary_feature_maps_are_bits(trained):
+    params, x = trained
+    packed = bcnn.fold_model(params)
+    from repro.core import bconv
+    a_pm1 = bconv.fpconv_apply(packed.conv1, x)
+    assert set(np.unique(np.asarray(a_pm1))) <= {-1.0, 1.0}

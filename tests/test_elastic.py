@@ -1,0 +1,54 @@
+"""Elastic shard assignment: determinism, balance, minimal movement,
+straggler work stealing."""
+from hypothesis import given, settings, strategies as st
+
+from repro.train import elastic
+
+SET = settings(max_examples=50, deadline=None)
+
+
+def _hosts(n):
+    return [f"host{i}" for i in range(n)]
+
+
+@SET
+@given(st.integers(1, 256), st.integers(1, 32))
+def test_assign_partitions_completely_and_evenly(n_shards, n_hosts):
+    a = elastic.assign(n_shards, _hosts(n_hosts))
+    got = sorted(s for v in a.values() for s in v)
+    assert got == list(range(n_shards))
+    sizes = [len(v) for v in a.values()]
+    assert max(sizes) - min(sizes) <= 1
+
+
+def test_assign_deterministic_and_order_independent():
+    a = elastic.assign(64, _hosts(7))
+    b = elastic.assign(64, list(reversed(_hosts(7))))
+    assert a == b
+
+
+def test_failure_moves_few_shards():
+    hosts = _hosts(16)
+    before = elastic.assign(256, hosts)
+    after = elastic.replan_on_failure(256, hosts, dead={"host3"})
+    # every shard still covered
+    assert sorted(s for v in after.values() for s in v) == list(range(256))
+    # shards NOT owned by the dead host mostly stay put (rendezvous +
+    # rebalance: movement ≈ dead host's share + O(hosts))
+    moved = 0
+    for h in hosts:
+        if h == "host3":
+            continue
+        moved += len(set(before[h]) - set(after.get(h, [])))
+    assert moved <= 256 // 16 + 16
+
+
+def test_straggler_steals_from_slowest():
+    a = elastic.assign(64, _hosts(4))
+    lat = {"host0": 1.0, "host1": 1.1, "host2": 1.0, "host3": 5.0}
+    b = elastic.straggler_plan(a, lat)
+    assert len(b["host3"]) < len(a["host3"])
+    assert sorted(s for v in b.values() for s in v) == list(range(64))
+    # below threshold: no movement
+    lat_ok = {h: 1.0 for h in a}
+    assert elastic.straggler_plan(a, lat_ok) == a

@@ -1,0 +1,49 @@
+"""End-to-end launcher drivers on smoke configs (local 1-device mesh)."""
+import os
+
+import pytest
+
+from repro.launch import serve as serve_launch
+from repro.launch import train as train_launch
+
+
+def test_train_driver_runs_and_checkpoints(tmp_path):
+    rc = train_launch.main([
+        "--arch", "yi-6b", "--smoke", "--steps", "4", "--batch", "2",
+        "--seq", "32", "--ckpt-dir", str(tmp_path), "--ckpt-every", "2",
+        "--log-every", "2"])
+    assert rc == 0
+    assert sorted(os.listdir(tmp_path))[-1] == "step_00000004"
+
+
+def test_train_driver_resume(tmp_path):
+    train_launch.main([
+        "--arch", "yi-6b", "--smoke", "--steps", "2", "--batch", "2",
+        "--seq", "32", "--ckpt-dir", str(tmp_path), "--ckpt-every", "2"])
+    rc = train_launch.main([
+        "--arch", "yi-6b", "--smoke", "--steps", "4", "--batch", "2",
+        "--seq", "32", "--ckpt-dir", str(tmp_path), "--ckpt-every", "2",
+        "--resume"])
+    assert rc == 0
+
+
+def test_train_driver_binary_quant():
+    rc = train_launch.main([
+        "--arch", "qwen3-8b", "--smoke", "--steps", "2", "--batch", "2",
+        "--seq", "32", "--quant", "binary_weights", "--microbatches", "2"])
+    assert rc == 0
+
+
+def test_serve_driver():
+    rc = serve_launch.main([
+        "--arch", "yi-6b", "--smoke", "--requests", "3", "--slots", "2",
+        "--prompt-len", "4", "--max-new", "4", "--max-len", "32"])
+    assert rc == 0
+
+
+def test_serve_driver_whisper():
+    rc = serve_launch.main([
+        "--arch", "whisper-medium", "--smoke", "--requests", "2",
+        "--slots", "2", "--prompt-len", "3", "--max-new", "3",
+        "--max-len", "32"])
+    assert rc == 0

@@ -1,0 +1,76 @@
+"""Serving weight packing: 1-bit artifact correctness + policy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import layers, transformer
+from repro.serve import packing
+
+
+def test_dense_packed_equals_sign_matmul():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((256, 96)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((4, 256)), jnp.float32)
+    packed = packing._pack_leaf(w)
+    y = layers.dense(packed, x)
+    alpha = np.mean(np.abs(np.asarray(w)), axis=0)
+    want = np.asarray(x) @ (np.where(np.asarray(w) >= 0, 1.0, -1.0) * alpha)
+    np.testing.assert_allclose(np.asarray(y, np.float32), want,
+                               rtol=2e-2, atol=2e-2)   # bf16 multiply
+
+
+def test_pack_policy_keeps_first_last_fp():
+    cfg = configs.get_config("qwen3-8b")
+    abstract = jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+    packed = jax.eval_shape(lambda p: packing.pack_params_for_serving(p),
+                            abstract)
+    # embeddings / head stay fp (paper first/last-layer rule)
+    assert "embedding" in packed["embed"]
+    assert "w" in packed["head"]
+    # projections are packed
+    st = packed["stack0_dense_attn"]
+    assert "w_packed" in st["attn"]["wq"]
+    assert st["attn"]["wq"]["w_packed"].dtype == jnp.int32
+    assert "w_packed" in st["mlp"]["wi"]
+    # 32× smaller: packed words = in/32
+    assert st["mlp"]["wi"]["w_packed"].shape[-1] == cfg.d_model // 32
+
+
+def test_pack_moe_experts_and_router():
+    cfg = configs.get_config("deepseek-v2-lite-16b")
+    abstract = jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+    packed = jax.eval_shape(lambda p: packing.pack_params_for_serving(p),
+                            abstract)
+    moe = packed["stack1_moe"]["moe"]
+    assert "w_packed" in moe["experts"]["wi"]          # (L, E, out, in/32)
+    assert "w" in moe["router"]                        # router stays fp
+    # MLA absorbed-decode factors stay fp
+    assert "w" in packed["stack1_moe"]["attn"]["wk_b"]
+
+
+def test_packed_fraction_dominates():
+    cfg = configs.get_config("yi-6b", smoke=True)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    packed = packing.pack_params_for_serving(params)
+    # smoke configs have huge relative embeddings; full config dominates
+    cfg_full = configs.get_config("yi-6b")
+    abstract = jax.eval_shape(
+        lambda: transformer.init_params(cfg_full, jax.random.PRNGKey(0)))
+    packed_abs = jax.eval_shape(
+        lambda p: packing.pack_params_for_serving(p), abstract)
+    frac = packing.packed_fraction(packed_abs)
+    assert frac > 0.85, frac
+
+
+def test_packed_forward_runs():
+    cfg = configs.get_config("qwen3-8b", smoke=True, quant="binary_weights")
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    packed = packing.pack_params_for_serving(params)
+    state = transformer.init_serve_state(cfg, 2, 16)
+    toks = jnp.zeros((2, 1), jnp.int32)
+    logits, state = transformer.decode_step(cfg, packed, state, toks)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())

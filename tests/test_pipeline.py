@@ -1,0 +1,67 @@
+"""Pipeline parallelism: stage balance + the executable ppermute pipeline.
+
+The shard_map pipeline needs ≥2 devices, so it runs in a subprocess with
+forced host devices (the same isolation rule as dryrun.py — tests in THIS
+process must keep seeing 1 device).
+"""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+from repro import configs
+from repro.parallel import pipeline as pp
+
+
+def test_plan_stages_balanced():
+    cfg = configs.get_config("yi-6b")
+    bounds = pp.plan_stages(cfg, 4)
+    assert bounds[0] == 0 and bounds[-1] == cfg.n_layers
+    sizes = np.diff(bounds)
+    assert sizes.min() >= 1
+    # uniform layers → perfectly even split
+    assert sizes.max() - sizes.min() <= 1
+
+
+def test_schedule_1f1b_limits():
+    s = pp.schedule_1f1b([1.0, 1.0, 1.0, 1.0], n_micro=4)
+    assert 0 < s["bubble_fraction"] < 1
+    big = pp.schedule_1f1b([1.0] * 4, n_micro=4096)
+    assert big["bubble_fraction"] < 0.01          # eq.12 limit: no bubble
+    assert abs(big["efficiency"] - 1.0) < 0.01
+
+
+def test_moe_stage_costs_higher():
+    cfg = configs.get_config("deepseek-v2-lite-16b")
+    costs = pp.layer_costs(cfg, 4096)
+    assert len(costs) == cfg.n_layers and min(costs) > 0
+
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.parallel import pipeline as pp
+
+    mesh = jax.make_mesh((4,), ("stage",))
+    L, D = 8, 16
+    key = jax.random.PRNGKey(0)
+    stack = {"w": jax.random.normal(key, (L, D, D)) * 0.3}
+    def apply_fn(lp, x):
+        return jnp.tanh(x @ lp["w"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 4, D))  # (n_micro,B,D)
+    want = pp.sequential_forward(stack, x, apply_fn=apply_fn)
+    got = pp.pipelined_forward(stack, x, mesh=mesh, axis="stage",
+                               apply_fn=apply_fn, layers_per_stage=L // 4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    print("PIPELINE_OK")
+""")
+
+
+def test_pipelined_forward_matches_sequential():
+    r = subprocess.run([sys.executable, "-c", _SUBPROC],
+                       capture_output=True, text=True, timeout=600,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert "PIPELINE_OK" in r.stdout, r.stdout + r.stderr

@@ -1,0 +1,111 @@
+"""Hypothesis property tests on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitpack
+from repro.core.normbinarize import BNParams, fold_threshold, norm_binarize
+from repro.core.throughput import balance_stages, pipeline_throughput
+from repro.train import optimizer as opt_lib
+
+SET = settings(max_examples=40, deadline=None)
+
+
+# --------------------------------------------------------------------- bitpack
+
+@SET
+@given(st.integers(1, 300), st.integers(1, 7), st.integers(0, 2 ** 31 - 1))
+def test_pack_unpack_roundtrip(k, rows, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (rows, k)).astype(np.int8)
+    words = bitpack.pack_bits(bitpack.pad_to_pack(jnp.asarray(bits)))
+    back = bitpack.unpack_bits(words, k)
+    np.testing.assert_array_equal(np.asarray(back), bits)
+
+
+@SET
+@given(st.integers(1, 200), st.integers(0, 2 ** 31 - 1))
+def test_xnor_dot_equals_pm1_dot(k, seed):
+    """Eq. 5/6: XNOR agree-count ↔ ±1 dot product, any (unaligned) K."""
+    rng = np.random.default_rng(seed)
+    a = np.sign(rng.standard_normal((3, k)) + 1e-9)
+    w = np.sign(rng.standard_normal((5, k)) + 1e-9)
+    aw = bitpack.pack_pm1(jnp.asarray(a))
+    ww = bitpack.pack_pm1(jnp.asarray(w))
+    y_l = bitpack.xnor_dot(aw[:, None, :], ww[None, :, :], k)
+    y = bitpack.pm1_from_xnor(y_l, k)
+    np.testing.assert_array_equal(np.asarray(y), (a @ w.T).astype(np.int64))
+
+
+# ---------------------------------------------------------------- normbinarize
+
+@SET
+@given(st.integers(4, 256), st.integers(0, 2 ** 31 - 1),
+       st.booleans())
+def test_fold_threshold_equals_bn_sign(cnum, seed, neg_gamma):
+    """Eq. 8 ≡ Binarize(BN(2y−cnum)) for ANY γ sign (incl. the paper's
+    unstated γ>0 assumption — we handle γ<0 with the flip bit)."""
+    rng = np.random.default_rng(seed)
+    n = 8
+    bn = BNParams(
+        mean=jnp.asarray(rng.standard_normal(n) * 3),
+        var=jnp.asarray(rng.random(n) * 4 + 0.1),
+        gamma=jnp.asarray((-1 if neg_gamma else 1)
+                          * (rng.random(n) * 2 + 0.05)),
+        beta=jnp.asarray(rng.standard_normal(n)), eps=1e-4)
+    thr = fold_threshold(bn, cnum, rounded=False)
+    y_l = jnp.asarray(rng.integers(0, cnum + 1, (16, n)))
+    got = norm_binarize(y_l, thr)
+    y_lo = 2 * y_l - cnum
+    z = ((y_lo - bn.mean) / jnp.sqrt(bn.var + bn.eps)) * bn.gamma + bn.beta
+    want = (z >= 0).astype(jnp.int8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------------------ throughput
+
+@SET
+@given(st.lists(st.floats(0.1, 100), min_size=1, max_size=12),
+       st.integers(1, 6))
+def test_balance_stages_optimal(costs, n_stages):
+    """The DP returns the true min-bottleneck contiguous partition."""
+    n_stages = min(n_stages, len(costs))
+    bounds = balance_stages(costs, n_stages)
+    assert bounds[0] == 0 and bounds[-1] == len(costs)
+    assert all(b2 > b1 for b1, b2 in zip(bounds, bounds[1:]))
+    got = 1.0 / pipeline_throughput(costs, bounds)
+
+    # brute force all partitions for small n
+    import itertools
+    best = float("inf")
+    for cuts in itertools.combinations(range(1, len(costs)), n_stages - 1):
+        bb = [0, *cuts, len(costs)]
+        best = min(best, max(sum(costs[bb[i]:bb[i + 1]])
+                             for i in range(n_stages)))
+    assert got <= best * (1 + 1e-9)
+
+
+# ------------------------------------------------------- gradient compression
+
+@SET
+@given(st.integers(0, 2 ** 31 - 1))
+def test_ef_compression_unbiased_accumulation(seed):
+    """Error feedback: quantization error is carried, not lost — the sum of
+    transmitted values tracks the sum of true gradients."""
+    rng = np.random.default_rng(seed)
+    g_true = [jnp.asarray(rng.standard_normal((4, 4)) * (i + 1))
+              for i in range(3)]
+    params = {"a": jnp.zeros((4, 4))}
+    ef = opt_lib.ef_init(params)
+    sent = jnp.zeros((4, 4))
+    for g in g_true:
+        q, ef = opt_lib.compress_decompress({"a": g}, ef)
+        sent = sent + q["a"]
+        # wire format really is 1 bit + scale:
+        vals = np.unique(np.abs(np.asarray(q["a"])))
+        assert len(vals) == 1
+    total = sum(np.asarray(g) for g in g_true)
+    resid = np.asarray(ef.residual["a"])
+    np.testing.assert_allclose(np.asarray(sent) + resid, total,
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,109 @@
+"""Serving engine: continuous batching correctness.
+
+The hard invariant is slot independence: a request's output must not depend
+on what else shares the batch (per-slot KV positions + masks)."""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer
+from repro.serve import ServingEngine
+
+
+@pytest.fixture(scope="module", params=["qwen3-8b", "deepseek-v2-lite-16b",
+                                        "rwkv6-3b"])
+def setup(request):
+    cfg = configs.get_config(request.param, smoke=True)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _serve(cfg, params, prompts, n_slots, max_new=6):
+    eng = ServingEngine(cfg, params, n_slots=n_slots, max_len=64)
+    rids = [eng.submit(p, max_new_tokens=max_new) for p in prompts]
+    out = eng.run()
+    return [out[r] for r in rids]
+
+
+def test_all_requests_complete(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (5,)).tolist()
+               for _ in range(7)]
+    outs = _serve(cfg, params, prompts, n_slots=3)
+    assert len(outs) == 7
+    assert all(len(o) == 6 for o in outs)
+
+
+def test_slot_independence(setup):
+    """Same request alone vs sharing slots with others → identical output."""
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    target = rng.integers(0, cfg.vocab_size, (5,)).tolist()
+    others = [rng.integers(0, cfg.vocab_size, (4,)).tolist()
+              for _ in range(3)]
+    alone = _serve(cfg, params, [target], n_slots=4)[0]
+    packed = _serve(cfg, params, [target] + others, n_slots=4)[0]
+    assert alone == packed
+
+
+def test_slot_reuse_is_clean(setup):
+    """A request served in a freshly-reset slot matches a fresh engine."""
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    a = rng.integers(0, cfg.vocab_size, (5,)).tolist()
+    b = rng.integers(0, cfg.vocab_size, (5,)).tolist()
+    # serve a then b through ONE single-slot engine (b reuses a's slot)
+    eng = ServingEngine(cfg, params, n_slots=1, max_len=64)
+    ra = eng.submit(a, 5)
+    rb = eng.submit(b, 5)
+    out = eng.run()
+    fresh_b = _serve(cfg, params, [b], n_slots=1, max_new=5)[0]
+    assert out[rb] == fresh_b
+
+
+def test_greedy_matches_decode_step(setup):
+    """Engine greedy output == hand-rolled prefill+decode with the model."""
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, (4,)).tolist()
+    got = _serve(cfg, params, [prompt], n_slots=1, max_new=4)[0]
+
+    import jax.numpy as jnp
+    state = transformer.init_serve_state(cfg, 1, 64)
+    toks = list(prompt)
+    out = []
+    for t in toks:
+        logits, state = transformer.decode_step(
+            cfg, params, state, jnp.asarray([[t]], jnp.int32))
+    for _ in range(4):
+        nxt = int(jnp.argmax(logits[0, -1]))
+        out.append(nxt)
+        logits, state = transformer.decode_step(
+            cfg, params, state, jnp.asarray([[nxt]], jnp.int32))
+    assert got == out
+
+
+def test_whisper_enc_dec_serving():
+    """Audio family: per-slot encoder K/V, continuous batching."""
+    import numpy as np
+    cfg = configs.get_config("whisper-medium", smoke=True)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=32)
+    rids = []
+    frames = [rng.standard_normal((cfg.encoder_seq, cfg.d_model)
+                                  ).astype(np.float32) for _ in range(3)]
+    for f in frames:
+        rids.append(eng.submit([1, 2, 3], max_new_tokens=4, frontend=f))
+    out = eng.run()
+    assert len(out) == 3 and all(len(out[r]) == 4 for r in rids)
+    # the encoder input must matter: different audio → (generally)
+    # different continuation for the same prompt
+    solo = []
+    for f in frames[:2]:
+        e2 = ServingEngine(cfg, params, n_slots=1, max_len=32)
+        r = e2.submit([1, 2, 3], max_new_tokens=4, frontend=f)
+        solo.append(e2.run()[r])
+    assert solo[0] == out[rids[0]] and solo[1] == out[rids[1]]

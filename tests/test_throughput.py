@@ -1,0 +1,60 @@
+"""The §4.3 throughput model must reproduce the paper's Table 3 / §6.2 numbers."""
+import math
+
+import pytest
+
+from repro.core import throughput as tp
+
+
+def test_cycle_conv_matches_table3():
+    for d in tp.BCNN_CONV_LAYERS:
+        uf, p, cc, ce, _ = tp.PAPER_TABLE3[d.name]
+        assert tp.cycle_conv(d) == cc, d.name
+
+
+def test_cycle_est_matches_table3():
+    for d in tp.BCNN_CONV_LAYERS:
+        uf, p, _, ce, _ = tp.PAPER_TABLE3[d.name]
+        assert tp.cycle_est(d, uf, p) == ce, d.name
+
+
+def test_paper_uf_rule():
+    """§6: 'operations along the FW and FD dimensions are fully unfolded'."""
+    for idx, d in enumerate(tp.BCNN_CONV_LAYERS):
+        uf_paper = tp.PAPER_TABLE3[d.name][0]
+        assert tp.paper_uf(d, first_layer=(idx == 0)) == uf_paper, d.name
+
+
+def test_system_fps_and_tops():
+    """Eq. 12 with the reported Cycle_r reproduces 6218 FPS / 7.663 TOPS."""
+    cycles_r = {n: v[4] for n, v in tp.PAPER_TABLE3.items()}
+    fps = tp.system_throughput_fps(cycles_r)
+    assert abs(fps - tp.PAPER_FPS) < 1.0, fps
+    assert abs(tp.tops(fps) - tp.PAPER_TOPS) < 0.015, tp.tops(fps)
+
+
+def test_optimizer_reproduces_paper_allocation():
+    """Greedy bottleneck-doubling under the paper's ΣP=112 budget → Table 3."""
+    alloc = tp.optimize_parallelism()
+    for name, (uf, p, ce) in alloc.items():
+        uf_p, p_p, _, ce_p, _ = tp.PAPER_TABLE3[name]
+        assert (uf, p, ce) == (uf_p, p_p, ce_p), (name, uf, p, ce)
+
+
+def test_balance_stages_optimal_bottleneck():
+    costs = [5, 1, 1, 1, 5, 1, 1, 1]
+    bounds = tp.balance_stages(costs, 4)
+    stage_costs = [sum(costs[bounds[i]:bounds[i + 1]]) for i in range(4)]
+    assert max(stage_costs) == 5           # optimal: [5][1,1,1][5][1,1,1]
+    assert bounds[0] == 0 and bounds[-1] == len(costs)
+    assert all(b2 > b1 for b1, b2 in zip(bounds, bounds[1:]))
+
+
+def test_balance_stages_monotone_in_stage_count():
+    costs = [3.0, 7.0, 2.0, 5.0, 4.0, 6.0, 1.0, 8.0]
+    prev = math.inf
+    for s in range(1, len(costs) + 1):
+        b = tp.balance_stages(costs, s)
+        rate = tp.pipeline_throughput(costs, b)
+        assert 1.0 / rate <= prev + 1e-9
+        prev = 1.0 / rate
