@@ -52,14 +52,24 @@ def paper_curves() -> dict:
     }
 
 
-def measured_curve(batches=(1, 4, 16, 64), reps: int = 3) -> dict:
-    """Our packed BCNN per-image latency vs batch (XLA path, CPU)."""
+def measured_curve(batches=(1, 4, 16, 64), reps: int = 3,
+                   conv_strategy: str = pc.CONV_STRATEGY) -> dict:
+    """Our packed BCNN per-image latency vs batch (XLA path, CPU).
+
+    ``conv_strategy`` selects the binary-conv dataflow (core/bconv.py;
+    default from configs/bcnn_cifar10.py): "direct" is the im2col-free path
+    whose batch-insensitivity is the Fig. 7 claim under test; "im2col" is
+    the patch-matmul baseline. On CPU both run as XLA-lowered references —
+    the wall-clock contrast is dataflow shape, not the Pallas kernel.
+    """
     params = bcnn.init(jax.random.PRNGKey(0))
     packed = bcnn.fold_model(params)
-    out = {"batch": [], "img_per_s": [], "us_per_img": []}
+    out = {"batch": [], "img_per_s": [], "us_per_img": [],
+           "conv_strategy": conv_strategy}
     for b in batches:
         x = jax.random.uniform(jax.random.PRNGKey(b), (b, 32, 32, 3))
-        fn = lambda xx: bcnn.forward_packed(packed, xx, path="xla")
+        fn = lambda xx: bcnn.forward_packed(packed, xx, path="xla",
+                                            conv_strategy=conv_strategy)
         fn(x).block_until_ready()                      # compile+warm
         t0 = time.perf_counter()
         for _ in range(reps):
@@ -88,17 +98,20 @@ def run(verbose: bool = True, measure: bool = True) -> dict:
         print(f"energy-eff ratio @512 : {pa['eff_ratio_b512']:.1f}× "
               f"(paper: 9.5×)")
     if measure:
-        m = measured_curve()
-        res["measured"] = m
-        if verbose:
-            print("measured (our packed BCNN, XLA-on-CPU):")
-            for b, ips, us in zip(m["batch"], m["img_per_s"],
-                                  m["us_per_img"]):
-                print(f"  batch {b:3d}: {ips:8.1f} img/s  "
-                      f"{us:9.0f} us/img")
-            flat = max(m["us_per_img"][1:]) / min(m["us_per_img"][1:])
-            print(f"  per-image time spread (b≥4): {flat:.2f}× "
-                  f"(streaming claim: ≈flat)")
+        for strat in ("im2col", "direct"):
+            m = measured_curve(conv_strategy=strat)
+            res[f"measured_{strat}"] = m
+            if verbose:
+                print(f"measured (our packed BCNN, XLA-on-CPU, "
+                      f"conv={strat}):")
+                for b, ips, us in zip(m["batch"], m["img_per_s"],
+                                      m["us_per_img"]):
+                    print(f"  batch {b:3d}: {ips:8.1f} img/s  "
+                          f"{us:9.0f} us/img")
+                flat = max(m["us_per_img"][1:]) / min(m["us_per_img"][1:])
+                print(f"  per-image time spread (b≥4): {flat:.2f}× "
+                      f"(streaming claim: ≈flat)")
+        res["measured"] = res["measured_im2col"]       # back-compat alias
     return res
 
 

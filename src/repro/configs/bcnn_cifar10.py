@@ -15,6 +15,12 @@ NAME = "bcnn-cifar10"
 INPUT_SHAPE = (32, 32, 3)          # CIFAR-10 RGB
 N_CLASSES = 10
 
+# Binary-conv dataflow for the deployment path (core/bconv.py):
+# "direct" = fused im2col-free Pallas kernel (paper Fig. 5/6 dataflow),
+# "im2col" = patch-matmul lowering, "auto" = direct when C % 32 == 0.
+# All BCNN conv layers have 32-aligned channels, so "auto" → direct.
+from repro.core.bconv import DEFAULT_CONV_STRATEGY as CONV_STRATEGY  # noqa: E402,F401
+
 # Paper Fig. 7 benchmark batch sizes (FPGA vs GPU sweep)
 FIG7_BATCH_SIZES = (16, 32, 64, 128, 256, 512)
 

@@ -169,11 +169,15 @@ def fold_model(params: BCNNParams) -> BCNNPacked:
 
 
 def forward_packed(packed: BCNNPacked, x01: jnp.ndarray,
-                   path: str = "mxu") -> jnp.ndarray:
+                   path: str = "mxu",
+                   conv_strategy: str | None = None) -> jnp.ndarray:
     """Deployment forward: bit feature maps all the way (paper Fig. 3).
 
-    Not jit'd at the top level: the packed artifacts carry static ints (k)
-    that must stay Python values; each XNOR kernel call is jit'd internally.
+    ``conv_strategy``: "direct" | "im2col" | "auto"/None — the binary-conv
+    dataflow (see core/bconv.py); configs/bcnn_cifar10.py re-exports the
+    default. Not jit'd at the top level: the packed artifacts carry static
+    ints (k) that must stay Python values; each XNOR kernel call is jit'd
+    internally.
     """
     from repro.kernels import ops
     # layer 1: fp conv → NormBinarize → {0,1} bits
@@ -181,7 +185,8 @@ def forward_packed(packed: BCNNPacked, x01: jnp.ndarray,
     a_bits = bitpack.encode_pm1(a_pm1)                        # {0,1}
     for i, fp in enumerate(packed.convs):
         a_bits = bconv.apply_packed(fp, a_bits,
-                                    maxpool=CONV_SPECS[i + 1][2], path=path)
+                                    maxpool=CONV_SPECS[i + 1][2], path=path,
+                                    strategy=conv_strategy)
     words = bitpack.pack_bits(a_bits.reshape(a_bits.shape[0], -1))  # (N, 256)
     for fp in packed.fcs:
         bits = blinear.apply_packed(fp, words, path=path)

@@ -1,15 +1,30 @@
-"""Binary 2-D convolution (paper §3.1) — XNOR dot product via im2col.
+"""Binary 2-D convolution (paper §3.1) — two dataflows: im2col and direct.
 
 The paper's convolutional kernel computes each output pixel as an XNOR dot
-product over an FW×FH×FD reception field (eq. 3/5). On TPU we lower this as
-im2col → packed XNOR matmul, which maps the reduction onto the same kernels
-as the fully-connected layers (the paper does the same: "The hardware kernel
-of fully-connected layers is similar to Fig. 6").
+product over an FW×FH×FD reception field (eq. 3/5). This module lowers it
+two ways, selected by ``strategy``:
 
-Layout: NHWC feature maps, HWIO→(O, FH*FW*I) flattened filters.
-First layer (eq. 7): FpDotProduct of 6-bit activations × 2-bit weights —
-implemented as a regular conv in fp with quantized operands (TPU has no
-sub-8-bit dtypes; DESIGN.md §2.2).
+* ``"im2col"`` — materialize (N, H, W, FH·FW·C) patches, pack, and reuse the
+  packed XNOR *matmul* kernels (the paper notes the FC kernel "is similar to
+  Fig. 6"). Simple and fully general, but the patch tensor costs FH·FW× the
+  activation bytes in HBM — exactly the off-chip traffic the paper's
+  deep-pipelined design avoids.
+* ``"direct"`` — the paper-faithful dataflow (Fig. 5/6): a fused Pallas
+  kernel (``kernels/xnor_conv.py``) keeps the channel-packed image in VMEM,
+  gathers each FH×FW reception field on-chip, and fuses XNOR + popcount +
+  the eq. (8) NormBinarize comparator. No im2col buffer ever exists in HBM;
+  packed words are the only activation traffic.
+* ``"auto"`` (default) — ``direct`` when the channel count is 32-aligned
+  (packed words identical in both layouts), else ``im2col``.
+
+See ``kernels/README.md`` for the trade-off in bytes and how the direct
+kernel maps onto the paper's pipeline stages.
+
+Layout: NHWC feature maps; im2col packs HWIO→(O, FH·FW·I) flat, the direct
+kernel packs per filter position →(O, FH·FW·ceil(I/32)) (both precomputed by
+``fold``). First layer (eq. 7): FpDotProduct of 6-bit activations × 2-bit
+weights — implemented as a regular conv in fp with quantized operands (TPU
+has no sub-8-bit dtypes; DESIGN.md §2.2).
 """
 from __future__ import annotations
 
@@ -32,10 +47,16 @@ class BConvParams(NamedTuple):
     bn_beta: jnp.ndarray
 
 
+DEFAULT_CONV_STRATEGY = "auto"   # "auto" | "direct" | "im2col"
+
+
 class BConvPacked(NamedTuple):
-    w_words: jnp.ndarray    # (O, ceil(FH*FW*I/32)) int32
+    w_words: jnp.ndarray    # (O, ceil(FH*FW*I/32)) int32 — im2col layout
     thr: NBThreshold
     k: int                  # FH*FW*I = the paper's cnum
+    w_words_hw: jnp.ndarray | None = None  # (O, FH*FW*ceil(I/32)) — direct
+    fh: int = 3
+    fw: int = 3
 
 
 def init(key, in_ch: int, out_ch: int, fh: int = 3, fw: int = 3,
@@ -48,10 +69,13 @@ def init(key, in_ch: int, out_ch: int, fh: int = 3, fw: int = 3,
                        bn_beta=jnp.zeros((out_ch,), dtype))
 
 
-def _im2col(x: jnp.ndarray, fh: int, fw: int, pad: int = 1) -> jnp.ndarray:
-    """NHWC → (N, H, W, FH*FW*C) patches (stride 1, zero padding `pad`)."""
+def _im2col(x: jnp.ndarray, fh: int, fw: int,
+            pad: int | tuple[int, int] = 1) -> jnp.ndarray:
+    """NHWC → (N, H, W, FH*FW*C) patches (stride 1, zero padding `pad`,
+    a scalar or per-dimension (pad_h, pad_w))."""
     n, h, w, c = x.shape
-    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    ph, pw = (pad, pad) if isinstance(pad, int) else pad
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
     cols = []
     for dy in range(fh):
         for dx in range(fw):
@@ -88,44 +112,84 @@ def apply_train(p: BConvParams, a_pm1: jnp.ndarray, *,
 
 
 def fold(p: BConvParams) -> BConvPacked:
+    from repro.kernels.xnor_conv import pack_conv_weights
     o, fh, fw, i = p.w.shape
     k = fh * fw * i
     w_flat = p.w.reshape(o, k)
     # im2col emits patches ordered (dy, dx, c) — (fh, fw, i) reshape matches.
     w_words = bitpack.pack_pm1(w_flat)
     bn = BNParams(p.bn_mean, p.bn_var, p.bn_gamma, p.bn_beta)
-    return BConvPacked(w_words=w_words, thr=fold_threshold(bn, cnum=k), k=k)
+    return BConvPacked(w_words=w_words, thr=fold_threshold(bn, cnum=k), k=k,
+                       w_words_hw=pack_conv_weights(p.w), fh=fh, fw=fw)
 
 
-def apply_packed(fp: BConvPacked, a_bits: jnp.ndarray, *, fh: int = 3,
-                 fw: int = 3, maxpool: bool = False, path: str = "mxu",
-                 fuse_nb: bool = True) -> jnp.ndarray:
+def resolve_strategy(strategy: str | None, c: int,
+                     fp: BConvPacked | None = None) -> str:
+    """Resolve "auto" (and None) to a concrete dataflow for channel count c.
+
+    "auto" → "direct" when C is 32-aligned (packed activation words are
+    identical in both layouts, so the direct kernel is a pure traffic win),
+    else fall back to "im2col" (general, handles per-position pad raggedness
+    without re-packing the feature map).
+    """
+    strategy = strategy or DEFAULT_CONV_STRATEGY
+    if strategy == "auto":
+        have_hw = fp is None or fp.w_words_hw is not None
+        strategy = ("direct" if c % bitpack.PACK == 0 and have_hw
+                    else "im2col")
+    if strategy not in ("direct", "im2col"):
+        raise ValueError(f"unknown conv strategy: {strategy!r}")
+    if strategy == "direct" and fp is not None and fp.w_words_hw is None:
+        raise ValueError(
+            "strategy='direct' needs the per-position weight layout; this "
+            "BConvPacked predates it — re-fold() the params or use "
+            "strategy='im2col'")
+    return strategy
+
+
+def apply_packed(fp: BConvPacked, a_bits: jnp.ndarray, *,
+                 fh: int | None = None, fw: int | None = None,
+                 maxpool: bool = False, path: str = "mxu",
+                 fuse_nb: bool = True,
+                 strategy: str | None = None) -> jnp.ndarray:
     """Packed inference conv on {0,1} int8 NHWC bit feature maps.
 
-    a_bits: (N, H, W, C) {0,1}; im2col patches are packed per pixel and sent
-    through the XNOR kernel. Max-pool (paper: on y_l before NormBinarize)
-    commutes with the monotone eq. 8 threshold, so with fuse_nb we pool the
-    output *bits*: max where the compare is y>=c, min where γ<0 flips it.
+    a_bits: (N, H, W, C) {0,1}. fh/fw default to the filter size recorded at
+    fold() time. ``strategy`` picks the dataflow (module docstring): "direct"
+    streams the channel-packed image through the fused
+    ``kernels/xnor_conv.py`` kernel; "im2col" packs FH·FW·C patches per pixel
+    and reuses the XNOR matmul kernels; "auto"/None resolves per
+    ``resolve_strategy``. Both are bit-identical.
+
+    Max-pool (paper: on y_l before NormBinarize) commutes with the monotone
+    eq. 8 threshold, so with fuse_nb we pool the output *bits*: max where the
+    compare is y>=c, min where γ<0 flips it.
     """
+    fh = fh if fh is not None else fp.fh
+    fw = fw if fw is not None else fp.fw
     n, h, w, c = a_bits.shape
-    patches = _im2col(a_bits, fh, fw)                         # (N,H,W,K)
-    words = bitpack.pack_bits(bitpack.pad_to_pack(patches))   # (N,H,W,Kw)
-    if fuse_nb:
-        out = ops.xnor_matmul(words, fp.w_words, k=fp.k,
-                              thr_c=fp.thr.c, thr_flip=fp.thr.flip, path=path)
+    strategy = resolve_strategy(strategy, c, fp)
+    thr = dict(thr_c=fp.thr.c, thr_flip=fp.thr.flip) if fuse_nb else {}
+    if strategy == "direct":
+        out = ops.xnor_conv2d(a_bits, fp.w_words_hw, k=fp.k, fh=fh, fw=fw,
+                              path=path, **thr)
+    else:
+        patches = _im2col(a_bits, fh, fw, pad=(fh // 2, fw // 2))  # (N,H,W,K)
+        words = bitpack.pack_bits(bitpack.pad_to_pack(patches))  # (N,H,W,Kw)
+        out = ops.xnor_matmul(words, fp.w_words, k=fp.k, path=path, **thr)
+    if not fuse_nb:
         if maxpool:
-            mx = jax.lax.reduce_window(out, jnp.int8(0), jax.lax.max,
-                                       (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
-            mn = jax.lax.reduce_window(out, jnp.int8(1), jax.lax.min,
-                                       (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
-            out = jnp.where(fp.thr.flip[None, None, None, :], mn, mx)
+            out = jax.lax.reduce_window(out, jnp.iinfo(jnp.int32).min,
+                                        jax.lax.max,
+                                        (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
         return out
-    y_l = ops.xnor_matmul(words, fp.w_words, k=fp.k, path=path)
     if maxpool:
-        y_l = jax.lax.reduce_window(y_l, jnp.iinfo(jnp.int32).min,
-                                    jax.lax.max,
-                                    (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
-    return y_l
+        mx = jax.lax.reduce_window(out, jnp.int8(0), jax.lax.max,
+                                   (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        mn = jax.lax.reduce_window(out, jnp.int8(1), jax.lax.min,
+                                   (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        out = jnp.where(fp.thr.flip[None, None, None, :], mn, mx)
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -1,3 +1,5 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas TPU kernels for the paper's compute hot-spots (see README.md):
+#   xnor_matmul.py     — packed XNOR matmul (FC layers) + binary-weight matmul
+#   xnor_conv.py       — direct (im2col-free) binary conv, Fig. 5/6 dataflow
+#   flash_attention.py — blocked attention for the beyond-paper LM configs
+# Public padded/jit'd entry points live in ops.py; pure-jnp oracles in ref.py.

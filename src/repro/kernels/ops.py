@@ -85,6 +85,79 @@ def xnor_matmul(a_words: jnp.ndarray, w_words: jnp.ndarray, *, k: int,
     return y.reshape(*lead, n)
 
 
+@functools.partial(jax.jit, static_argnames=("k", "fh", "fw", "stride", "pad",
+                                             "path", "interpret"))
+def xnor_conv2d(a_bits: jnp.ndarray, w_words: jnp.ndarray, *, k: int,
+                fh: int, fw: int, stride: int = 1,
+                pad: int | tuple[int, int] | None = None,
+                thr_c: jnp.ndarray | None = None,
+                thr_flip: jnp.ndarray | None = None,
+                path: str = "mxu",
+                interpret: bool | None = None) -> jnp.ndarray:
+    """Direct (im2col-free) binary conv: (N, H, W, C) bits × packed filters.
+
+    a_bits:  (N, H, W, C) {0,1} activation bits (int8)
+    w_words: (O, FH·FW·Cw) int32 per-position packed filters
+             (``xnor_conv.pack_conv_weights``)
+    k:       true reduction length FH·FW·C (the paper's cnum)
+    pad:     scalar or (pad_h, pad_w); default SAME-style (fh//2, fw//2)
+    Returns (N, HO, WO, O) int32 agree-counts y_l, or {0,1} int8 bits when
+    thresholds are given (fused eq. 8 NormBinarize). Spatial zero padding is
+    in the {1,0} bit domain, i.e. pads with −1 — identical to the im2col and
+    train paths. ``path``: "vpu" | "mxu" | "xla" (jnp oracle, no Pallas).
+    """
+    from repro.kernels import xnor_conv as kconv
+    if interpret is None:
+        interpret = not _on_tpu()
+    if pad is None:
+        pad = (fh // 2, fw // 2)
+    ph, pw = (pad, pad) if isinstance(pad, int) else pad
+    n, h, w, c = a_bits.shape
+    o, ll = w_words.shape
+    kwc = ll // (fh * fw)
+    ho = (h + 2 * ph - fh) // stride + 1
+    wo = (w + 2 * pw - fw) // stride + 1
+
+    if path == "xla":
+        w_bits = bitpack.unpack_bits(w_words.reshape(o, fh, fw, kwc))[..., :c]
+        y = kref.xnor_conv2d_ref(a_bits, w_bits, stride=stride, pad=(ph, pw))
+        if thr_c is not None:
+            ge = y >= thr_c[None, None, None, :]
+            y = jnp.where(thr_flip[None, None, None, :] != 0, ~ge,
+                          ge).astype(jnp.int8)
+        return y
+
+    # pack activation channels: (N, H, W, C) bits → (N, H, W, Cw) words
+    aw = bitpack.pack_bits(bitpack.pad_to_pack(a_bits))
+    # tile the output grid; pad the packed image so every tile's reception
+    # span exists (extra rows/cols are zero words = −1 bits, sliced away)
+    th = _block_for(ho, kconv.TH, floor=1)
+    tw = _block_for(wo, kconv.TW, floor=1)
+    bo = _block_for(o, kconv.BO)
+    ho_p = -(-ho // th) * th
+    wo_p = -(-wo // tw) * tw
+    hp_need = (ho_p - 1) * stride + fh
+    wp_need = (wo_p - 1) * stride + fw
+    aw = jnp.pad(aw, ((0, 0),
+                      (ph, max(0, hp_need - h - ph)),
+                      (pw, max(0, wp_need - w - pw)),
+                      (0, 0)))
+    w_p, o_true = _pad_rows(w_words, bo)
+    cc = ff = None
+    if thr_c is not None:
+        cc = jnp.pad(thr_c.astype(jnp.float32), (0, w_p.shape[0] - o_true),
+                     constant_values=jnp.inf).reshape(1, -1)
+        ff = jnp.pad(thr_flip.astype(jnp.int32), (0, w_p.shape[0] - o_true)
+                     ).reshape(1, -1)
+    fn = kconv.xnor_conv2d_vpu if path == "vpu" else kconv.xnor_conv2d_mxu
+    y = fn(aw, w_p, k=k, fh=fh, fw=fw, stride=stride, ho=ho_p, wo=wo_p,
+           thr_c=cc, thr_flip=ff, th=th, tw=tw, bo=bo, interpret=interpret)
+    y = y[:, :ho, :wo, :o_true]
+    if thr_c is not None:
+        y = y.astype(jnp.int8)
+    return y
+
+
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def binary_weight_matmul(a: jnp.ndarray, w_words: jnp.ndarray, *, k: int,
                          scale: jnp.ndarray | None = None,

@@ -38,6 +38,39 @@ def norm_binarize_ref(y_l: jnp.ndarray, c: jnp.ndarray, flip: jnp.ndarray) -> jn
     return jnp.where(flip[None, :], ~ge, ge).astype(jnp.int8)
 
 
+def xnor_conv2d_ref(a_bits: jnp.ndarray, w_bits: jnp.ndarray, *,
+                    stride: int = 1,
+                    pad: int | tuple[int, int] = 1) -> jnp.ndarray:
+    """Oracle for the direct binary conv kernels (paper eq. 3/5).
+
+    a_bits: (N, H, W, C)  {0,1} activation bits
+    w_bits: (O, FH, FW, C) {0,1} weight bits
+    pad:    scalar or per-dimension (pad_h, pad_w)
+    Returns (N, HO, WO, O) int32 agree-counts y_l. Spatial padding encodes
+    −1 (bit 0), matching the packed kernels and the ±1 train path.
+    """
+    n, h, w, c = a_bits.shape
+    o, fh, fw, _ = w_bits.shape
+    ph, pw = (pad, pad) if isinstance(pad, int) else pad
+    a = a_bits.astype(jnp.int32) * 2 - 1
+    wt = w_bits.astype(jnp.int32) * 2 - 1
+    ap = jnp.pad(a, ((0, 0), (ph, ph), (pw, pw), (0, 0)),
+                 constant_values=-1)
+    ho = (h + 2 * ph - fh) // stride + 1
+    wo = (w + 2 * pw - fw) // stride + 1
+    cols = []
+    for dy in range(fh):
+        for dx in range(fw):
+            cols.append(jax.lax.slice(
+                ap, (0, dy, dx, 0),
+                (n, dy + (ho - 1) * stride + 1, dx + (wo - 1) * stride + 1, c),
+                (1, stride, stride, 1)))
+    patches = jnp.concatenate(cols, axis=-1)        # (N, HO, WO, FH·FW·C)
+    dot = jnp.einsum("nhwk,ok->nhwo", patches, wt.reshape(o, -1))
+    k = fh * fw * c
+    return ((k + dot) // 2).astype(jnp.int32)
+
+
 def binary_weight_matmul_ref(a: jnp.ndarray, w_words: jnp.ndarray, k: int,
                              scale: jnp.ndarray | None = None) -> jnp.ndarray:
     """Oracle for the weight-only binary matmul (BitNet-style, beyond-paper).

@@ -9,6 +9,16 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    # jax.sharding.AxisType landed after 0.4.x; Auto is the default there,
+    # so omit the kwarg on older versions instead of crashing at call time.
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False, pods: int = 0):
     """16×16 single pod, or pods×16×16 (pods=2 is the assignment's
     multi-pod target; pods=4 = 1024 chips exercises the 1000+-node scale
@@ -17,9 +27,7 @@ def make_production_mesh(*, multi_pod: bool = False, pods: int = 0):
         pods = 2 if multi_pod else 1
     shape = (pods, 16, 16) if pods > 1 else (16, 16)
     axes = ("pod", "data", "model") if pods > 1 else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def dp_axes(mesh) -> tuple[str, ...]:
@@ -30,6 +38,4 @@ def dp_axes(mesh) -> tuple[str, ...]:
 
 def make_local_mesh():
     """1-device mesh with the production axis names (tests/examples)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((1, 1), ("data", "model"))

@@ -81,6 +81,13 @@ class ServingEngine:
                frontend=None) -> int:
         """frontend: (S_enc, D) precomputed frame/patch embeddings — the
         stub modality input for the audio (whisper) family."""
+        if len(prompt_tokens) >= self.max_len - 1:
+            # the KV cache holds max_len positions and generation needs at
+            # least one; admitting a longer prompt would silently write past
+            # the cache (positions clamp/drop under jit) and corrupt output
+            raise ValueError(
+                f"prompt length {len(prompt_tokens)} must be < max_len-1 "
+                f"({self.max_len - 1}); raise max_len or truncate the prompt")
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append(_Request(rid, list(prompt_tokens), max_new_tokens,

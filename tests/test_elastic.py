@@ -1,5 +1,9 @@
 """Elastic shard assignment: determinism, balance, minimal movement,
 straggler work stealing."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.train import elastic

@@ -1,0 +1,100 @@
+"""Golden-value regression tests for the Pallas binary-matmul kernels.
+
+Unlike the oracle-parity tests (test_kernels.py), these pin the kernels to
+*checked-in* expected int32 tiles computed from small, deterministic,
+hand-computable fixtures — so a refactor that breaks both a kernel and its
+oracle the same way is still caught, without needing a TPU.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitpack
+from repro.kernels import ops
+
+# ---------------------------------------------------------------------------
+# Hand-computed micro case (K=4, one packed word, 28 pad bits).
+#   a  = [+1, +1, −1, −1]          → bits 0b0011
+#   w0 = [+1, −1, +1, −1] agree at positions 0,3          → y_l = 2
+#   w1 = [+1, +1, −1, −1] agree everywhere                → y_l = 4
+#   w2 = [−1, −1, +1, +1] agree nowhere                   → y_l = 0
+# ---------------------------------------------------------------------------
+
+A_HAND = [[+1, +1, -1, -1]]
+W_HAND = [[+1, -1, +1, -1], [+1, +1, -1, -1], [-1, -1, +1, +1]]
+Y_HAND = [[2, 4, 0]]
+
+# ---------------------------------------------------------------------------
+# Formulaic 4×4 tile over K=40 (ragged: 2 words, 24 pad bits).
+#   a_bits[i, j] = (3i + 2j) mod 5 < 2
+#   w_bits[n, j] = (n + j) mod 3 == 0
+#   y_l = (K + (±a)·(±w)ᵀ) / 2, computed once and checked in below.
+# ---------------------------------------------------------------------------
+
+K_GOLD = 40
+Y_GOLD = [[22, 23, 19, 22],
+          [22, 19, 23, 22],
+          [20, 23, 21, 20],
+          [22, 21, 21, 22]]
+# fused NormBinarize with c = [20, 21, 19, 22], flip = [0, 1, 0, 1]
+C_GOLD = [20.0, 21.0, 19.0, 22.0]
+FLIP_GOLD = [False, True, False, True]
+BITS_GOLD = [[1, 0, 1, 0],
+             [1, 1, 1, 0],
+             [1, 0, 1, 1],
+             [1, 0, 1, 0]]
+
+# ---------------------------------------------------------------------------
+# binary_weight_matmul: integer-valued activations (exact in bf16×±1 + f32
+# accumulation), K=64, checked-in integer outputs.
+#   a[i, j] = ((i + 2j) mod 7) − 3;  w_bits[n, j] = (5n + j) mod 4 < 2
+# ---------------------------------------------------------------------------
+
+K_BW = 64
+BW_GOLD = [[-9, -7, 9],
+           [-2, -14, 2]]
+
+
+def _gold_operands():
+    a_bits = np.fromfunction(lambda i, j: (3 * i + 2 * j) % 5 < 2,
+                             (4, K_GOLD)).astype(np.int8)
+    w_bits = np.fromfunction(lambda n, j: (n + j) % 3 == 0,
+                             (4, K_GOLD)).astype(np.int8)
+    a_words = bitpack.pack_bits(bitpack.pad_to_pack(jnp.asarray(a_bits)))
+    w_words = bitpack.pack_bits(bitpack.pad_to_pack(jnp.asarray(w_bits)))
+    return a_words, w_words
+
+
+@pytest.mark.parametrize("path", ["vpu", "mxu", "xla"])
+def test_xnor_matmul_hand_case(path):
+    a_words = bitpack.pack_pm1(jnp.asarray(A_HAND, jnp.float32))
+    w_words = bitpack.pack_pm1(jnp.asarray(W_HAND, jnp.float32))
+    y = ops.xnor_matmul(a_words, w_words, k=4, path=path)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(Y_HAND))
+
+
+@pytest.mark.parametrize("path", ["vpu", "mxu", "xla"])
+def test_xnor_matmul_golden_tile(path):
+    a_words, w_words = _gold_operands()
+    y = ops.xnor_matmul(a_words, w_words, k=K_GOLD, path=path)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(Y_GOLD))
+
+
+@pytest.mark.parametrize("path", ["vpu", "mxu"])
+def test_xnor_matmul_golden_fused(path):
+    a_words, w_words = _gold_operands()
+    bits = ops.xnor_matmul(a_words, w_words, k=K_GOLD,
+                           thr_c=jnp.asarray(C_GOLD, jnp.float32),
+                           thr_flip=jnp.asarray(FLIP_GOLD), path=path)
+    np.testing.assert_array_equal(np.asarray(bits), np.asarray(BITS_GOLD))
+
+
+def test_binary_weight_matmul_golden():
+    a = np.fromfunction(lambda i, j: ((i + 2 * j) % 7) - 3,
+                        (2, K_BW)).astype(np.float32)
+    w_bits = np.fromfunction(lambda n, j: (5 * n + j) % 4 < 2,
+                             (3, K_BW)).astype(np.int8)
+    w_words = bitpack.pack_bits(jnp.asarray(w_bits))
+    y = ops.binary_weight_matmul(jnp.asarray(a), w_words, k=K_BW)
+    np.testing.assert_array_equal(np.asarray(y, np.int64),
+                                  np.asarray(BW_GOLD))

@@ -4,6 +4,7 @@ The shard_map pipeline needs ≥2 devices, so it runs in a subprocess with
 forced host devices (the same isolation rule as dryrun.py — tests in THIS
 process must keep seeing 1 device).
 """
+import os
 import subprocess
 import sys
 import textwrap
@@ -61,7 +62,13 @@ _SUBPROC = textwrap.dedent("""
 
 
 def test_pipelined_forward_matches_sequential():
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    # forward the backend pin: the bare env would let the child jax probe
+    # for TPUs (and hang on GCP metadata) on TPU-libs-installed hosts
+    for var in ("JAX_PLATFORMS", "XLA_FLAGS"):
+        if var in os.environ:
+            env[var] = os.environ[var]
     r = subprocess.run([sys.executable, "-c", _SUBPROC],
                        capture_output=True, text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       env=env)
     assert "PIPELINE_OK" in r.stdout, r.stdout + r.stderr

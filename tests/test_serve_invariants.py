@@ -1,0 +1,91 @@
+"""Serving-engine edge-case invariants (beyond test_serve.py's happy paths).
+
+Covers: EOS fired on the very first generated token, prompts that don't fit
+the KV cache, generation truncation at the cache boundary, and slot-reset
+isolation (a reused slot must be bit-identical to a fresh engine) for both
+attention and recurrent families.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer
+from repro.serve import ServingEngine
+
+FAMILIES = ["qwen3-8b", "rwkv6-3b"]   # attention + recurrent state resets
+
+
+@pytest.fixture(scope="module", params=FAMILIES)
+def setup(request):
+    cfg = configs.get_config(request.param, smoke=True)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_eos_on_first_generated_token(setup):
+    """EOS as the very first generated token: request completes with exactly
+    that one token — the slot frees immediately, no max_new padding."""
+    cfg, params = setup
+    eos = 7
+    force_eos = lambda logits: jnp.full((logits.shape[0],), eos, jnp.int32)
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=32, eos_id=eos,
+                        sampler=force_eos)
+    rids = [eng.submit([1, 2, 3], max_new_tokens=5) for _ in range(3)]
+    out = eng.run()
+    assert all(out[r] == [eos] for r in rids)
+
+
+def test_eos_mid_stream_frees_slot_for_queue(setup):
+    """A request ending early hands its slot to the queue; everyone finishes."""
+    cfg, params = setup
+    eos = 7
+    force_eos = lambda logits: jnp.full((logits.shape[0],), eos, jnp.int32)
+    eng = ServingEngine(cfg, params, n_slots=1, max_len=32, eos_id=eos,
+                        sampler=force_eos)
+    rids = [eng.submit([1, 2], max_new_tokens=9) for _ in range(4)]
+    out = eng.run()
+    assert len(out) == 4 and all(out[r] == [eos] for r in rids)
+
+
+def test_prompt_longer_than_max_len_rejected(setup):
+    """A prompt that cannot fit the KV cache is rejected at submit (it would
+    otherwise silently clamp cache writes and corrupt the output)."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, n_slots=1, max_len=8)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(list(range(1, 21)), max_new_tokens=2)
+    # boundary: max_len-2 tokens still admits (room for one generated token)
+    rid = eng.submit(list(range(1, 7)), max_new_tokens=1)
+    out = eng.run()
+    assert len(out[rid]) == 1
+
+
+def test_generation_truncates_at_cache_boundary(setup):
+    """max_new past the cache end: generation stops at max_len−1 total
+    tokens instead of writing out of bounds."""
+    cfg, params = setup
+    max_len, prompt = 8, [1, 2, 3, 4]
+    eng = ServingEngine(cfg, params, n_slots=1, max_len=max_len)
+    rid = eng.submit(prompt, max_new_tokens=50)
+    out = eng.run()
+    assert len(out[rid]) == max_len - 1 - len(prompt)
+
+
+def test_slot_reset_isolation(setup):
+    """A request decoded in a reused slot is bit-identical to the same
+    request on a fresh engine — no KV/recurrent state leaks across resets."""
+    cfg, params = setup
+    rng = np.random.default_rng(42)
+    a = rng.integers(0, cfg.vocab_size, (6,)).tolist()
+    b = rng.integers(0, cfg.vocab_size, (5,)).tolist()
+    # one single-slot engine: b decodes in the slot a just vacated
+    eng = ServingEngine(cfg, params, n_slots=1, max_len=64)
+    eng.submit(a, 6)
+    rb = eng.submit(b, 6)
+    reused = eng.run()[rb]
+    fresh_eng = ServingEngine(cfg, params, n_slots=1, max_len=64)
+    rf = fresh_eng.submit(b, 6)
+    fresh = fresh_eng.run()[rf]
+    assert reused == fresh

@@ -55,7 +55,6 @@ def test_moe_expert_parallel():
 
 def test_fsdp_shards_large_tensors_over_dp():
     specs, abstract = _specs("deepseek-v2-236b")
-    leaves = jax.tree.leaves_with_path(specs)
     big_with_dp = 0
     flat_abs = dict(jax.tree_util.tree_flatten_with_path(abstract)[0])
     for path, spec in jax.tree_util.tree_flatten_with_path(specs)[0]:
