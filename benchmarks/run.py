@@ -12,8 +12,8 @@ import time
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
-                    choices=["all", "table3", "table5", "fig7", "roofline",
-                             "kernels"])
+                    choices=["all", "table3", "table5", "fig7",
+                             "fig7-online", "roofline", "kernels"])
     ap.add_argument("--no-measure", action="store_true",
                     help="skip wall-clock measurements (CI mode)")
     args = ap.parse_args(argv)
@@ -33,6 +33,11 @@ def main(argv=None) -> None:
     bench("table3", lambda: table3.run())
     bench("table5", lambda: table5.run())
     bench("fig7", lambda: fig7.run(measure=not args.no_measure))
+    if not args.no_measure:      # the online bench IS a measurement
+        bench("fig7-online", lambda: fig7.run_online())
+    elif args.only == "fig7-online":
+        print("fig7-online skipped: it is pure wall-clock measurement and "
+              "--no-measure was given")
     bench("kernels", lambda: kernels.run(measure=not args.no_measure))
     bench("roofline", lambda: roofline.run())
 

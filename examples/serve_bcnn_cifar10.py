@@ -1,0 +1,84 @@
+"""Streaming BCNN serving demo — the paper's Fig. 7 story, served live.
+
+The paper's FPGA wins 8.3× at batch 16 because its streaming pipeline
+serves *online individual requests* without waiting to fill a batch. This
+demo drives our packed-BCNN slot engine (serve/bcnn_engine.py) with a
+Poisson arrival process at two offered loads:
+
+  a) light load (well under engine capacity) — latency ≈ one engine step:
+     a lone request is served immediately at full speed, the
+     batch-insensitivity the paper's architecture is built for;
+  b) heavy load (near capacity) — slots saturate, the FIFO queue forms,
+     and the p95/p99 tail shows the queueing delay while *throughput*
+     holds at capacity.
+
+Along the way it checks the zero-recompile contract: one jit compilation
+of the BCNN step across every occupancy the arrival process produces.
+
+Run:  PYTHONPATH=src python examples/serve_bcnn_cifar10.py
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import bcnn_cifar10 as pc
+from repro.core import bcnn
+from repro.data import SyntheticImages
+from repro.serve import BCNNEngine, drive_poisson
+
+
+def measure_capacity(eng: BCNNEngine, reps: int = 3) -> float:
+    """Engine capacity in img/s: a full-occupancy step serves n_slots."""
+    eng.warmup()
+    x = np.random.default_rng(0).random(
+        (eng.n_slots, *eng.input_shape)).astype(np.float32)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for img in x:
+            eng.submit(img)
+        eng.run()
+    dt = (time.perf_counter() - t0) / reps
+    return eng.n_slots / dt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--slots", type=int, default=pc.SERVE_N_SLOTS)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    params = bcnn.init(jax.random.PRNGKey(args.seed))
+    packed = bcnn.fold_model(params)
+    eng = BCNNEngine.from_packed(packed, n_slots=args.slots,
+                                 history=max(4096, args.requests))
+    x, _ = SyntheticImages(global_batch=args.requests,
+                           seed=args.seed).batch(0)
+
+    cap = measure_capacity(eng)
+    print(f"engine capacity ({args.slots} slots, full occupancy): "
+          f"{cap:.1f} img/s")
+
+    for label, frac in (("light load (0.2× capacity)", 0.2),
+                        ("heavy load (0.9× capacity)", 0.9)):
+        d = drive_poisson(eng, x, rate_hz=frac * cap, seed=args.seed + 1)
+        st = d["stats"]
+        print(f"{label}: offered {d['offered_hz']:.1f} req/s → achieved "
+              f"{st['throughput']:.1f} img/s")
+        print(f"  latency p50 {st['p50']*1e3:7.1f} ms   "
+              f"p95 {st['p95']*1e3:7.1f} ms   p99 {st['p99']*1e3:7.1f} ms   "
+              f"queue-wait p50 {st['queue_p50']*1e3:.1f} ms")
+
+    print(f"BCNN step compiled {eng.step_cache_size}× across "
+          f"{eng.steps_executed} steps (streaming contract: exactly 1 — "
+          f"occupancy is data, not shape)")
+    assert eng.step_cache_size == 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -24,6 +24,13 @@ from repro.core.bconv import DEFAULT_CONV_STRATEGY as CONV_STRATEGY  # noqa: E40
 # Paper Fig. 7 benchmark batch sizes (FPGA vs GPU sweep)
 FIG7_BATCH_SIZES = (16, 32, 64, 128, 256, 512)
 
+# Streaming-service defaults (serve/bcnn_engine.py, launch/serve_bcnn.py,
+# benchmarks/fig7.py --online): slot count for the continuously-stepped
+# engine, and the offered-load fractions (of measured single-engine
+# capacity) swept by the online benchmark's Poisson arrival process.
+SERVE_N_SLOTS = 4
+FIG7_ONLINE_LOAD_FRACS = (0.25, 0.6, 0.9)
+
 # Paper Fig. 7 reported numbers (digitized): throughput in FPS and
 # energy-efficiency ratios used by benchmarks/fig7.py for validation.
 PAPER_FPGA_FPS = 6218              # batch-size-invariant (the paper's claim)

@@ -196,6 +196,24 @@ def forward_packed(packed: BCNNPacked, x01: jnp.ndarray,
     return norm_only(y_l, packed.fc3_bn, packed.fc3_k)
 
 
+def make_packed_forward(packed: BCNNPacked, *, path: str = "mxu",
+                        conv_strategy: str | None = None):
+    """Close the packed artifacts over ``forward_packed`` → a jit-friendly fn.
+
+    ``forward_packed`` cannot be jit'd with ``packed`` as an argument: the
+    packed NamedTuples carry static Python ints (k, filter sizes) that jit
+    would trace into abstract values, breaking the kernels'
+    ``static_argnames``. Closing over them instead keeps the ints static and
+    gives the returned function a shape-only jit signature — ``jax.jit``
+    of it compiles exactly once per input shape, which is the zero-recompile
+    contract the streaming engine (``serve/bcnn_engine.py``) relies on.
+    """
+    def fwd(x01: jnp.ndarray) -> jnp.ndarray:
+        return forward_packed(packed, x01, path=path,
+                              conv_strategy=conv_strategy)
+    return fwd
+
+
 def loss_fn(params: BCNNParams, x01: jnp.ndarray, labels: jnp.ndarray):
     """Softmax cross-entropy over the Norm output + BN stat side-channel."""
     logits, stats = forward_train(params, x01)

@@ -1,8 +1,24 @@
-"""Public jit'd wrappers around the Pallas binary-matmul kernels.
+"""Public jit'd wrappers around the Pallas binary-matmul/conv kernels.
 
-Handles: leading-batch flattening, padding to TPU-aligned tiles, path selection
-(vpu | mxu | xla reference), and automatic interpret=True on non-TPU backends so
-the same call sites work in tests (CPU) and production (TPU).
+This is the layer every consumer calls (core/bconv.py, core/blinear.py,
+models/layers.py — never the raw kernels). Each wrapper handles:
+
+* leading-batch flattening (arbitrary ``(..., K)`` inputs),
+* padding rows/reduction words up to TPU-aligned tile multiples and
+  slicing the result back (threshold vectors are padded with +inf /
+  identity so padded lanes can never flip a bit),
+* ``path`` selection — "vpu" (paper-faithful XNOR + popcount on the
+  vector unit), "mxu" (unpack to ±1 and use the matrix unit), "xla"
+  (pure-jnp oracle from kernels/ref.py, no Pallas at all),
+* automatic ``interpret=True`` on non-TPU backends so the same call sites
+  work in tests (CPU) and production (TPU).
+
+All wrappers are ``jax.jit`` with *static* reduction lengths/filter sizes;
+they may be re-traced inside a larger jit (e.g. the serving engine jits
+``core/bcnn.py::make_packed_forward`` around a whole stack of these) —
+statics stay Python ints as long as they are closed over, not passed as
+traced pytree leaves. See ``src/repro/kernels/README.md`` for the kernel
+contracts and the direct-vs-im2col dataflow trade-off.
 """
 from __future__ import annotations
 
@@ -45,9 +61,17 @@ def xnor_matmul(a_words: jnp.ndarray, w_words: jnp.ndarray, *, k: int,
                 path: str = "mxu", interpret: bool | None = None) -> jnp.ndarray:
     """Paper eq. (5) XnorDotProduct: (..., Kw)ᵢₙₜ₃₂ × (N, Kw)ᵢₙₜ₃₂ → (..., N).
 
-    Returns int32 agree-counts y_l, or {0,1} int8 bits when thresholds are given
-    (fused eq. 8 NormBinarize). ``path``: "vpu" (paper-faithful XNOR+popcount),
-    "mxu" (TPU-native unpack→MXU), or "xla" (pure-jnp, no Pallas).
+    a_words / w_words: activations and weights bit-packed along the
+    reduction axis (``core/bitpack.pack_bits`` / ``pack_pm1``), Kw =
+    ceil(k/32) int32 words. ``k`` is the true reduction length (the paper's
+    cnum) — needed because pad bits beyond k must not count.
+
+    Returns int32 agree-counts y_l, or {0,1} int8 bits when per-output
+    thresholds are given (fused eq. 8 NormBinarize: ``thr_c`` the c_l
+    comparison constants, ``thr_flip`` the γ<0 direction bits — from
+    ``core/normbinarize.fold_threshold``). ``path``: "vpu" (paper-faithful
+    XNOR+popcount), "mxu" (TPU-native unpack→MXU), or "xla" (pure-jnp, no
+    Pallas).
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -164,8 +188,11 @@ def binary_weight_matmul(a: jnp.ndarray, w_words: jnp.ndarray, *, k: int,
                          interpret: bool | None = None) -> jnp.ndarray:
     """Weight-only binary matmul: real (..., K) × packed (N, Kw) → (..., N).
 
-    The decode-critical path for binary LMs: weights stream HBM→VMEM packed
-    (32× fewer bytes) and are unpacked to ±1 bf16 in VMEM for the MXU.
+    The decode-critical path for binary LMs ("binary_weights" quant mode):
+    activations stay real (bf16/f32), weights stream HBM→VMEM packed (32×
+    fewer bytes) and are unpacked to ±1 bf16 in VMEM for the MXU.
+    ``scale``: optional per-output-channel dequant scale applied to the
+    result (the binary-weight technique's α). Returns a's dtype.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -205,8 +232,12 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, q_block: int = 512,
                     kv_block: int = 512,
                     interpret: bool | None = None) -> jnp.ndarray:
-    """Flash attention, (B, Hq, S, hd) head-major. Pads S to the block
-    grid; kv-head count may divide q-head count (GQA)."""
+    """Blocked softmax attention, (B, Hq, S, hd) head-major → same shape.
+
+    Pads S up to the block grid and slices back; the kv-head count may
+    divide the q-head count (GQA — kv heads are broadcast over their query
+    group). ``causal`` applies the standard lower-triangular mask. Oracle:
+    ``kernels/ref.py::flash_attention_ref``."""
     from repro.kernels import flash_attention as fk
     if interpret is None:
         interpret = not _on_tpu()

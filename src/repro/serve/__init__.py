@@ -1,1 +1,4 @@
-from repro.serve.engine import ServingEngine  # noqa: F401
+from repro.serve.engine import ServingEngine            # noqa: F401
+from repro.serve.bcnn_engine import BCNNEngine, drive_poisson  # noqa: F401
+from repro.serve.slots import (Request, SlotScheduler,  # noqa: F401
+                               latency_stats)

@@ -1,0 +1,181 @@
+"""Streaming BCNN inference service — the paper's online-request scenario.
+
+The paper's headline result (§6.3, Fig. 7) is *batch-size-insensitive
+throughput for online individual requests*: the FPGA wins 8.3× at batch 16
+because its streaming pipeline never waits to fill a batch. This engine is
+the TPU/Pallas analogue of that serving discipline over the deployment-path
+BCNN (``core/bcnn.forward_packed`` — packed bits + XNOR kernels + fused
+eq. 8 comparators):
+
+* a fixed set of ``n_slots`` image slots stepped continuously;
+* FIFO admission (shared ``serve/slots.py`` scheduler) the moment a slot
+  frees — a request never waits for co-arrivals, only for a free slot;
+* ONE shape-stable jit'd step: the slot buffer is always
+  ``(n_slots, 32, 32, 3)``; occupancy is host-side data, not array shape,
+  so the step compiles exactly once however occupancy fluctuates
+  (guarded by tests/test_bcnn_engine.py via ``step_cache_size``);
+* greedy per-request completion: a BCNN request is a single forward, so
+  every occupied slot completes at the end of its step and frees
+  immediately for the next queued request;
+* per-request latency (submit → done) and aggregate throughput accounting
+  (``serve/slots.latency_stats``: p50/p95/p99) — the measured curve behind
+  ``benchmarks/fig7.py --online``.
+
+Entry points: ``launch/serve_bcnn.py`` (CLI service loop),
+``examples/serve_bcnn_cifar10.py`` (Poisson arrival demo).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bcnn
+from repro.serve.slots import SlotScheduler, latency_stats
+
+
+def _resolve_path(path: str) -> str:
+    """"auto" → the Pallas MXU kernels on TPU, the XLA reference off-TPU
+    (interpret-mode Pallas is correct but far too slow to *serve* with)."""
+    if path == "auto":
+        return "mxu" if jax.default_backend() == "tpu" else "xla"
+    return path
+
+
+class BCNNEngine:
+    """Continuous streaming engine over a one-shot image classifier.
+
+    ``forward_fn``: ``(n_slots, H, W, C) float32 → (n_slots, n_classes)``;
+    it is jit'd here, once, and must be shape-only (no per-call statics) —
+    use ``BCNNEngine.from_packed`` for the paper's BCNN.
+    """
+
+    def __init__(self, forward_fn: Callable, *, n_slots: int = 8,
+                 input_shape: tuple[int, int, int] = (32, 32, 3),
+                 clock: Callable[[], float] = time.perf_counter,
+                 history: int = 4096):
+        self.n_slots = n_slots
+        self.input_shape = tuple(input_shape)
+        self.sched = SlotScheduler(n_slots, clock=clock, history=history)
+        self._x = np.zeros((n_slots, *self.input_shape), np.float32)
+        # wrap in a per-engine lambda: jax keys its compilation cache on the
+        # function object, so two engines sharing one forward_fn would also
+        # share (and cross-pollute) the step_cache_size compile counter
+        self._step_fn = jax.jit(lambda x: forward_fn(x))
+        self._steps = 0
+
+    @classmethod
+    def from_packed(cls, packed: bcnn.BCNNPacked, *, n_slots: int = 8,
+                    path: str = "auto", conv_strategy: str | None = None,
+                    **kw) -> "BCNNEngine":
+        """Engine over the packed deployment forward (paper Fig. 3 path)."""
+        fwd = bcnn.make_packed_forward(packed, path=_resolve_path(path),
+                                       conv_strategy=conv_strategy)
+        return cls(fwd, n_slots=n_slots, **kw)
+
+    # ------------------------------------------------------------------ api
+    def submit(self, image: np.ndarray) -> int:
+        """Enqueue one image (H, W, C in [0, 1]); returns the request id."""
+        img = np.asarray(image, np.float32)
+        if img.shape != self.input_shape:
+            raise ValueError(f"image shape {img.shape} != engine input "
+                             f"shape {self.input_shape}")
+        return self.sched.submit(img)
+
+    def warmup(self) -> None:
+        """Compile the step before timing-sensitive driving (one trace)."""
+        jax.block_until_ready(self._step_fn(jnp.asarray(self._x)))
+
+    def step(self) -> dict[int, np.ndarray]:
+        """One engine tick: admit from the queue, run the fixed-shape
+        forward, complete every occupied slot. Returns {rid: logits}."""
+        for i, req in self.sched.admit():
+            self._x[i] = req.payload
+        if self.sched.n_occupied == 0:
+            return {}
+        logits = np.asarray(
+            jax.block_until_ready(self._step_fn(jnp.asarray(self._x))))
+        self._steps += 1
+        results = {}
+        for i, req in self.sched.occupied():
+            self.sched.complete(i)
+            results[req.rid] = logits[i]
+        return results
+
+    def run(self, max_steps: int = 100_000) -> dict[int, np.ndarray]:
+        """Drive until every submitted request completes. {rid: logits}."""
+        results: dict[int, np.ndarray] = {}
+        for _ in range(max_steps):
+            if not self.sched.any_active:
+                break
+            results.update(self.step())
+        return results
+
+    # ------------------------------------------------------------ accounting
+    @property
+    def steps_executed(self) -> int:
+        return self._steps
+
+    @property
+    def step_cache_size(self) -> int:
+        """Number of distinct compilations of the jit'd step. The streaming
+        contract is that this stays 1 across any occupancy pattern."""
+        return int(self._step_fn._cache_size())
+
+    def stats(self, last_n: int | None = None) -> dict:
+        """p50/p95/p99 latency + throughput over (the last_n) retained
+        finished requests — see ``serve/slots.latency_stats``."""
+        reqs = list(self.sched.finished)
+        if last_n is not None:
+            reqs = reqs[-last_n:]
+        return latency_stats(reqs)
+
+
+def drive_poisson(engine: BCNNEngine, images: np.ndarray, rate_hz: float,
+                  *, seed: int = 0, warmup: bool = True) -> dict:
+    """Offer ``images`` to the engine as a Poisson arrival process.
+
+    Real wall-clock simulation of the paper's online individual-request
+    regime: inter-arrival gaps are drawn i.i.d. exponential with mean
+    ``1/rate_hz``; the loop submits every request whose arrival time has
+    passed, steps the engine while anything is live, and sleeps to the next
+    arrival otherwise. Returns ``{"results", "stats", "offered_hz"}`` where
+    ``results`` and ``stats`` cover exactly this drive's requests
+    (p50/p95/p99 end-to-end latency and achieved throughput) — requests
+    already queued on the engine are served alongside but excluded.
+    """
+    if rate_hz <= 0:
+        raise ValueError(f"rate_hz must be > 0, got {rate_hz}")
+    rng = np.random.default_rng(seed)
+    n = len(images)
+    if n > engine.sched.finished.maxlen:
+        # stats are computed from the retained-history window; a drive
+        # larger than it would silently report a recent-biased subset
+        raise ValueError(
+            f"drive of {n} requests exceeds the engine's finished-request "
+            f"history ({engine.sched.finished.maxlen}); construct the "
+            f"engine with history >= {n}")
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, size=n))
+    if warmup:
+        engine.warmup()
+    my_rids: set[int] = set()
+    results: dict[int, np.ndarray] = {}
+    t0 = time.perf_counter()
+    nxt = 0
+    while len(results) < n:
+        now = time.perf_counter() - t0
+        while nxt < n and arrivals[nxt] <= now:
+            my_rids.add(engine.submit(images[nxt]))
+            nxt += 1
+        if engine.sched.any_active:
+            results.update((rid, logits)
+                           for rid, logits in engine.step().items()
+                           if rid in my_rids)
+        elif nxt < n:
+            time.sleep(max(0.0, min(arrivals[nxt] - now, 0.05)))
+    mine = [r for r in engine.sched.finished if r.rid in my_rids]
+    return {"results": results, "stats": latency_stats(mine),
+            "offered_hz": float(rate_hz)}

@@ -15,12 +15,15 @@ for a whole batch to drain. This engine implements that:
 * step function is jit'd once; slot occupancy is data, not shape — no
   recompilation as requests come and go (shape-stable serving).
 
-tests/test_serve.py checks continuity invariants (every request completes,
-outputs independent of co-tenants in the batch).
+Request bookkeeping (FIFO queue, slot table, latency stamps) lives in the
+shared ``serve/slots.py`` scheduler — the same one the streaming BCNN
+engine (``serve/bcnn_engine.py``) uses, so admission semantics are tested
+once (tests/test_slots.py). tests/test_serve.py checks continuity
+invariants (every request completes, outputs independent of co-tenants in
+the batch).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Callable
 
 import jax
@@ -28,16 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer
-
-
-@dataclass
-class _Request:
-    rid: int
-    prompt: list[int]
-    max_new: int
-    frontend: "np.ndarray | None" = None    # audio frames / patch embeds
-    out: list[int] = field(default_factory=list)
-    done: bool = False
+from repro.serve.slots import SlotScheduler
 
 
 class ServingEngine:
@@ -59,9 +53,7 @@ class ServingEngine:
             self._encode = jax.jit(
                 lambda params, frames: transformer._encode(cfg, params,
                                                            frames))
-        self._queue: list[_Request] = []
-        self._slots: list[_Request | None] = [None] * n_slots
-        self._next_rid = 0
+        self.sched = SlotScheduler(n_slots)
         self._steps = 0
 
         def step(params, state, tokens):
@@ -88,17 +80,14 @@ class ServingEngine:
             raise ValueError(
                 f"prompt length {len(prompt_tokens)} must be < max_len-1 "
                 f"({self.max_len - 1}); raise max_len or truncate the prompt")
-        rid = self._next_rid
-        self._next_rid += 1
-        self._queue.append(_Request(rid, list(prompt_tokens), max_new_tokens,
-                                    frontend=frontend))
-        return rid
+        return self.sched.submit(list(prompt_tokens),
+                                 max_new=max_new_tokens, frontend=frontend)
 
     def run(self, max_steps: int = 10_000) -> dict[int, list[int]]:
         """Drive until every submitted request completes. Returns outputs."""
         results: dict[int, list[int]] = {}
         for _ in range(max_steps):
-            if not self._admit() and all(s is None for s in self._slots):
+            if not self._admit():
                 break
             self._tick(results)
         return results
@@ -109,26 +98,20 @@ class ServingEngine:
 
     # ------------------------------------------------------------- internals
     def _admit(self) -> bool:
-        busy = False
-        for i, slot in enumerate(self._slots):
-            if slot is None and self._queue:
-                req = self._queue.pop(0)
-                self._slots[i] = req
-                self._pending[i] = list(req.prompt)
-                self._pos[i] = 0
-                self.state = self._reset_slot(self.state, i)
-                if req.frontend is not None:
-                    ek, ev = self._encode(self.params,
-                                          jnp.asarray(req.frontend)[None])
-                    cek, cev = self.state.enc_kv
-                    self.state = transformer.ServeState(
-                        self.state.caches,
-                        (cek.at[:, i].set(ek[:, 0].astype(cek.dtype)),
-                         cev.at[:, i].set(ev[:, 0].astype(cev.dtype))),
-                        self.state.length)
-            if self._slots[i] is not None:
-                busy = True
-        return busy
+        for i, req in self.sched.admit():
+            self._pending[i] = list(req.payload)
+            self._pos[i] = 0
+            self.state = self._reset_slot(self.state, i)
+            if req.frontend is not None:
+                ek, ev = self._encode(self.params,
+                                      jnp.asarray(req.frontend)[None])
+                cek, cev = self.state.enc_kv
+                self.state = transformer.ServeState(
+                    self.state.caches,
+                    (cek.at[:, i].set(ek[:, 0].astype(cek.dtype)),
+                     cev.at[:, i].set(ev[:, 0].astype(cev.dtype))),
+                    self.state.length)
+        return self.sched.n_occupied > 0
 
     def _reset_slot(self, state, i: int):
         """Zero slot i's cache/recurrent state (host-side surgery, O(slot))."""
@@ -144,22 +127,18 @@ class ServingEngine:
     def _tick(self, results: dict[int, list[int]]) -> None:
         # build the (n_slots, 1) token vector: prompt feed or last output
         toks = np.zeros((self.n_slots, 1), np.int32)
-        for i, req in enumerate(self._slots):
-            if req is None:
-                continue
+        for i, req in self.sched.occupied():
             if self._pending[i]:
                 toks[i, 0] = self._pending[i][0]
             elif req.out:
                 toks[i, 0] = req.out[-1]
-            elif req.prompt:
-                toks[i, 0] = req.prompt[-1]
+            elif req.payload:
+                toks[i, 0] = req.payload[-1]
         nxt, self.state = self._step(self.params, self.state,
                                      jnp.asarray(toks))
         self._steps += 1
         nxt = np.asarray(nxt)
-        for i, req in enumerate(self._slots):
-            if req is None:
-                continue
+        for i, req in self.sched.occupied():
             if self._pending[i]:
                 self._pending[i].pop(0)
                 self._pos[i] += 1
@@ -170,6 +149,5 @@ class ServingEngine:
             self._pos[i] += 1
             if (len(req.out) >= req.max_new or int(nxt[i]) == self.eos
                     or self._pos[i] >= self.max_len - 1):
-                req.done = True
                 results[req.rid] = req.out
-                self._slots[i] = None
+                self.sched.complete(i)

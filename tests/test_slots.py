@@ -1,0 +1,110 @@
+"""Shared slot scheduler (serve/slots.py): the bookkeeping both serving
+engines (LM continuous batching + streaming BCNN) rely on — FIFO admission
+order, slot reuse after completion, timing stamps, latency aggregation.
+
+Pure host-side: no jax required."""
+import itertools
+
+import pytest
+
+from repro.serve.slots import Request, SlotScheduler, latency_stats
+
+
+def make_clock(start: float = 0.0, step: float = 1.0):
+    """Deterministic monotone clock: 0, 1, 2, ... seconds."""
+    counter = itertools.count()
+    return lambda: start + step * next(counter)
+
+
+def test_fifo_admission_order():
+    s = SlotScheduler(2, clock=make_clock())
+    rids = [s.submit(f"p{i}") for i in range(5)]
+    assert rids == [0, 1, 2, 3, 4]          # monotone rid assignment
+    adm = s.admit()
+    assert [(i, r.rid) for i, r in adm] == [(0, 0), (1, 1)]
+    assert s.n_queued == 3 and s.n_occupied == 2
+    # no free slot → nothing admitted, queue order preserved
+    assert s.admit() == []
+    s.complete(1)
+    adm = s.admit()
+    assert [(i, r.rid) for i, r in adm] == [(1, 2)]   # next-in-FIFO, not rid 3
+
+
+def test_slot_reuse_after_completion():
+    s = SlotScheduler(1, clock=make_clock())
+    for i in range(4):
+        s.submit(i)
+    served = []
+    while s.any_active:
+        s.admit()
+        (slot, req), = s.occupied()
+        assert slot == 0                     # single slot reused every time
+        served.append(req.rid)
+        s.complete(slot)
+    assert served == [0, 1, 2, 3]
+    assert len(s.finished) == 4 and all(r.done for r in s.finished)
+
+
+def test_complete_unoccupied_slot_raises():
+    s = SlotScheduler(2)
+    with pytest.raises(ValueError, match="not occupied"):
+        s.complete(0)
+
+
+def test_timing_stamps_monotone_and_payload_dropped():
+    s = SlotScheduler(1, clock=make_clock())
+    s.submit("a")
+    s.submit("b")
+    s.admit()
+    ra = s.complete(0)
+    s.admit()
+    rb = s.complete(0)
+    for r in (ra, rb):
+        assert r.t_submit <= r.t_admit <= r.t_done
+        assert r.payload is None             # dropped at completion
+    # b queued while a held the slot → nonzero queue wait
+    assert rb.queue_wait > 0
+    assert ra.latency > 0 and rb.latency > ra.latency
+
+
+def test_latency_stats_percentiles():
+    reqs = [Request(rid=i, payload=None, done=True,
+                    t_submit=0.0, t_admit=0.5, t_done=float(i + 1))
+            for i in range(10)]              # latencies 1..10 s
+    st = latency_stats(reqs)
+    assert st["n"] == 10
+    assert st["p50"] <= st["p95"] <= st["p99"] <= st["max"] == 10.0
+    assert st["p50"] == pytest.approx(5.5)
+    assert st["throughput"] == pytest.approx(1.0)    # 10 requests / 10 s span
+    assert latency_stats([]) == {"n": 0}
+    # undone requests are excluded
+    assert latency_stats(reqs + [Request(rid=99, payload=None)])["n"] == 10
+
+
+def test_any_active_lifecycle():
+    s = SlotScheduler(2, clock=make_clock())
+    assert not s.any_active
+    s.submit("x")
+    assert s.any_active                      # queued counts as active
+    s.admit()
+    assert s.any_active                      # in-flight counts as active
+    s.complete(0)
+    assert not s.any_active
+
+
+def test_invalid_n_slots():
+    with pytest.raises(ValueError, match="n_slots"):
+        SlotScheduler(0)
+
+
+def test_finished_history_is_bounded():
+    """A long-running service must not retain every request ever served."""
+    s = SlotScheduler(1, clock=make_clock(), history=3)
+    for i in range(10):
+        s.submit(payload=[i], frontend=object())
+        s.admit()
+        s.complete(0)
+    assert len(s.finished) == 3
+    assert [r.rid for r in s.finished] == [7, 8, 9]      # most recent kept
+    # inputs are dropped at completion, only stamps/outputs retained
+    assert all(r.payload is None and r.frontend is None for r in s.finished)

@@ -1,0 +1,116 @@
+"""Lightweight docs link/path-rot checker (CI step + tests/test_docs.py).
+
+Scans the repo's documentation for references to repo files and fails when
+one does not exist:
+
+* markdown links ``[text](relative/path)`` (external http(s) and #anchors
+  are skipped),
+* inline-code path tokens like ``core/bcnn.py`` or ``docs/ARCHITECTURE.md``
+  in both markdown files and the module docstrings of the listed Python
+  files.
+
+A path token resolves if it exists relative to (a) the repo root, (b) the
+directory of the file that mentions it, or (c) ``src/repro`` — so docs can
+say ``serve/slots.py`` the way the code does. Trailing ``:line`` /
+``::test`` suffixes are stripped.
+
+Usage:  python tools/check_links.py            # check the default doc set
+        python tools/check_links.py A.md B.py  # check specific files
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# the default documentation surface kept rot-free in CI
+DEFAULT_FILES = [
+    "README.md",
+    "docs/ARCHITECTURE.md",
+    "benchmarks/README.md",
+    "src/repro/kernels/README.md",
+    "src/repro/serve/slots.py",
+    "src/repro/serve/engine.py",
+    "src/repro/serve/bcnn_engine.py",
+    "benchmarks/fig7.py",
+]
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# path-looking inline code: at least one '/' or a known doc/code suffix
+CODE_PATH = re.compile(
+    r"`([A-Za-z0-9_][A-Za-z0-9_./-]*\.(?:py|md|txt|ini|yml|json))`")
+SEARCH_BASES = ("", "src/repro")
+
+
+def _resolves(token: str, from_dir: Path) -> bool:
+    token = token.split("#")[0]
+    token = re.sub(r"(::.*|:\d+.*)$", "", token)
+    if not token:
+        return True
+    cands = [from_dir / token] + [ROOT / b / token for b in SEARCH_BASES]
+    return any(c.exists() for c in cands)
+
+
+def _doc_text(path: Path) -> str:
+    """The checkable text of a file: full content for markdown, the module
+    docstring (plus top-level class/function docstrings) for Python."""
+    text = path.read_text()
+    if path.suffix != ".py":
+        return text
+    try:
+        tree = ast.parse(text)
+    except SyntaxError:
+        return ""
+    docs = [ast.get_docstring(tree) or ""]
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            docs.append(ast.get_docstring(node) or "")
+    return "\n".join(docs)
+
+
+def check_file(path: Path) -> list[str]:
+    """Returns a list of human-readable problems found in ``path``."""
+    problems = []
+    text = _doc_text(path)
+    try:
+        rel = path.relative_to(ROOT)
+    except ValueError:          # argv file outside the repo: report as-is
+        rel = path
+    refs = []
+    if path.suffix == ".md":
+        for m in MD_LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            refs.append(target)
+    refs.extend(m.group(1) for m in CODE_PATH.finditer(text))
+    for token in refs:
+        if not _resolves(token, path.parent):
+            problems.append(f"{rel}: broken reference `{token}`")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    files = [Path(a) for a in argv] if argv else [ROOT / f
+                                                  for f in DEFAULT_FILES]
+    problems = []
+    for f in files:
+        f = f.resolve()
+        if not f.exists():
+            problems.append(f"{f}: file does not exist")
+            continue
+        problems.extend(check_file(f))
+    if problems:
+        print("\n".join(problems))
+        print(f"FAIL: {len(problems)} broken doc reference(s)")
+        return 1
+    print(f"ok: {len(files)} files, no broken references")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
