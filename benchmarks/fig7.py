@@ -22,13 +22,37 @@ Three layers of reproduction:
    1..n_slots), and per-request latency percentiles vs offered Poisson
    load (queueing tail at a held throughput).
 
-Run:  PYTHONPATH=src python benchmarks/fig7.py [--online] [--json out.json]
+4. **Measured, pipelined (``--pipeline``)** — the paper's *spatial*
+   parallelism story (§4, Fig. 5/6): the 9-layer forward cut into
+   cost-balanced stages over a device mesh (parallel/bcnn_pipeline.py).
+   Reports the analytic stage plans (Table 2 costs, eq. 12 bottleneck,
+   fill/drain efficiency), measured throughput vs n_stages, per-stage
+   wall-clock, and the engine step-time-vs-occupancy curve served through
+   the pipelined forward (zero-recompile guard included). On CPU the
+   harness forces ≥2 simulated host devices (XLA_FLAGS, set below before
+   jax imports) so the multi-device path is exercised.
+
+Run:  PYTHONPATH=src python benchmarks/fig7.py
+          [--online | --pipeline] [--json out.json]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
+
+# --pipeline needs >1 device to demonstrate multi-device staging; on a
+# plain-CPU host, simulate them. Must happen before jax is first imported
+# (XLA reads the flag at backend init), hence this pre-import shim keyed on
+# the raw argv ("fig7-pipeline" covers `-m benchmarks.run --only ...`).
+if (any(a in ("--pipeline", "fig7-pipeline") for a in sys.argv)
+        and "xla_force_host_platform_device_count"
+        not in os.environ.get("XLA_FLAGS", "")):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=2"
+                               ).strip()
 
 import jax
 import jax.numpy as jnp
@@ -184,6 +208,109 @@ def run_online(verbose: bool = True, **kw) -> dict:
     return res
 
 
+def pipeline_curve(stage_counts=pc.FIG7_PIPELINE_STAGE_COUNTS,
+                   n_images: int = 16, micro_batch: int = 2,
+                   n_slots: int = pc.SERVE_N_SLOTS, reps: int = 2,
+                   conv_strategy: str = pc.CONV_STRATEGY,
+                   seed: int = 0) -> dict:
+    """Measured stage-pipeline curves (parallel/bcnn_pipeline.py).
+
+    For each stage count: the analytic plan (Table 2 stage costs, eq. 12
+    bottleneck, fill/drain efficiency at this micro-batch count), measured
+    end-to-end throughput of a ``n_images`` batch through the pipelined
+    forward (parity-checked against ``forward_packed``), per-stage
+    wall-clock (the measured eq. 12 balance), and the engine
+    step-time-vs-occupancy sweep served through the pipelined forward
+    (per-stage jit compiled exactly once across the whole sweep).
+    """
+    from repro.parallel import bcnn_pipeline as bp
+
+    params = bcnn.init(jax.random.PRNGKey(seed))
+    packed = bcnn.fold_model(params)
+    rng = np.random.default_rng(seed)
+    x = rng.random((n_images, 32, 32, 3)).astype(np.float32)
+    ref = np.asarray(bcnn.forward_packed(packed, jnp.asarray(x), path="xla",
+                                         conv_strategy=conv_strategy))
+
+    out = {"devices": [str(d) for d in jax.devices()],
+           "n_images": n_images, "micro_batch": micro_batch,
+           "conv_strategy": conv_strategy, "stages": []}
+    n_micro = -(-n_images // micro_batch)
+    for s in stage_counts:
+        plan = bp.plan_bcnn_stages(s)
+        sched = bp.schedule_stream(plan, n_micro)
+        fwd = bp.make_pipelined_forward(packed, n_stages=s,
+                                        micro_batch=micro_batch, path="xla",
+                                        conv_strategy=conv_strategy)
+        got = np.asarray(fwd(x))                    # compile + parity
+        np.testing.assert_array_equal(got, ref)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fwd(x))
+        dt = (time.perf_counter() - t0) / reps
+        stage_ms = [t * 1e3 for t in fwd.stage_times(x)]
+
+        # occupancy sweep through the engine riding this pipeline: the
+        # streaming claim (flat step, ONE compile per stage) must survive
+        # the extra pipeline layer
+        eng = BCNNEngine.from_packed(packed, n_slots=n_slots, path="xla",
+                                     conv_strategy=conv_strategy,
+                                     pipeline_stages=s,
+                                     pipeline_micro_batch=1)
+        eng.warmup()
+        occ = {"occupancy": [], "step_ms": []}
+        for k in range(1, n_slots + 1):
+            for img in rng.random((k, 32, 32, 3), np.float32):
+                eng.submit(img)
+            t0 = time.perf_counter()
+            eng.run()
+            occ["occupancy"].append(k)
+            occ["step_ms"].append((time.perf_counter() - t0) * 1e3)
+        compiles = eng.step_cache_size
+        assert compiles == 1, (
+            f"pipelined step recompiled: per-stage jit cache {compiles} "
+            f"after occupancy sweep 1..{n_slots} (contract is exactly 1)")
+
+        out["stages"].append({
+            "n_stages": s,
+            "bounds": list(plan.bounds),
+            "stage_layers": [" + ".join(plan.stage_layers(i))
+                             for i in range(s)],
+            "stage_costs": list(plan.stage_costs),
+            "bottleneck": plan.bottleneck,
+            "balance": plan.balance,
+            "fill_drain_efficiency": sched["efficiency"],
+            "img_per_s": n_images / dt,
+            "stage_ms": stage_ms,
+            "occupancy_sweep": occ,
+            "step_compilations": compiles,
+        })
+    return out
+
+
+def run_pipeline(verbose: bool = True, **kw) -> dict:
+    res = pipeline_curve(**kw)
+    if verbose:
+        print(f"stage-pipelined deployment forward "
+              f"({len(res['devices'])} device(s), XLA-on-CPU, "
+              f"micro-batch {res['micro_batch']}):")
+        for st in res["stages"]:
+            print(f"  {st['n_stages']} stage(s): "
+                  f"{st['img_per_s']:6.1f} img/s   "
+                  f"balance {st['balance']:.2f}   "
+                  f"fill/drain eff {st['fill_drain_efficiency']:.2f}   "
+                  f"compiles/stage {st['step_compilations']}")
+            for i, (layers, c, ms) in enumerate(zip(
+                    st["stage_layers"], st["stage_costs"], st["stage_ms"])):
+                print(f"    stage {i}: {layers:<40s} "
+                      f"cost {c:12.4g}   {ms:7.1f} ms")
+            occ = st["occupancy_sweep"]
+            steps = "  ".join(f"{k}:{ms:.0f}ms" for k, ms in
+                              zip(occ["occupancy"], occ["step_ms"]))
+            print(f"    engine occupancy sweep (step wall-clock): {steps}")
+    return res
+
+
 def run(verbose: bool = True, measure: bool = True) -> dict:
     pa = paper_curves()
     res = {"paper": pa}
@@ -235,13 +362,21 @@ if __name__ == "__main__":
     ap.add_argument("--online", action="store_true",
                     help="measure the streaming-engine serving curves "
                          "instead of the offline batch sweep")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="measure the stage-pipelined multi-device forward "
+                         "(parallel/bcnn_pipeline.py); on CPU this forces "
+                         ">=2 simulated devices")
     ap.add_argument("--slots", type=int, default=pc.SERVE_N_SLOTS)
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump the result dict as JSON")
     args = ap.parse_args()
-    out = (run_online(n_slots=args.slots, n_requests=args.requests)
-           if args.online else run())
+    if args.pipeline:
+        out = run_pipeline(n_slots=args.slots)
+    elif args.online:
+        out = run_online(n_slots=args.slots, n_requests=args.requests)
+    else:
+        out = run()
     if args.json:
         with open(args.json, "w") as f:
             json.dump(_jsonable(out), f, indent=2)

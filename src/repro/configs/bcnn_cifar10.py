@@ -31,6 +31,15 @@ FIG7_BATCH_SIZES = (16, 32, 64, 128, 256, 512)
 SERVE_N_SLOTS = 4
 FIG7_ONLINE_LOAD_FRACS = (0.25, 0.6, 0.9)
 
+# Stage-pipelined deployment forward (parallel/bcnn_pipeline.py): number of
+# cost-balanced pipeline stages the packed 9-layer forward is cut into
+# (1 = single-device make_packed_forward, the default) and the micro-batch
+# granule streamed through them. Stage counts swept by
+# `benchmarks/fig7.py --pipeline`.
+PIPELINE_STAGES = 1
+PIPELINE_MICRO_BATCH = 1
+FIG7_PIPELINE_STAGE_COUNTS = (1, 2, 3)
+
 # Paper Fig. 7 reported numbers (digitized): throughput in FPS and
 # energy-efficiency ratios used by benchmarks/fig7.py for validation.
 PAPER_FPGA_FPS = 6218              # batch-size-invariant (the paper's claim)

@@ -168,6 +168,51 @@ def fold_model(params: BCNNParams) -> BCNNPacked:
         fc3_k=p3.w.shape[1])
 
 
+N_LAYERS = 9  # CONV-1..6 (indices 0..5) + FC-1..3 (indices 6..8)
+
+
+def apply_packed_layer(packed: BCNNPacked, idx: int, h: jnp.ndarray, *,
+                       path: str = "mxu",
+                       conv_strategy: str | None = None) -> jnp.ndarray:
+    """Apply ONE layer of the packed deployment forward (paper Fig. 3).
+
+    ``h`` is the layer's input in its *natural* inter-layer form, and the
+    return value is the next layer's natural input:
+
+    * idx 0 (CONV-1):   (N, 32, 32, 3) float image in [0, 1]
+                        → (N, 32, 32, 128) {0,1} int8 bit feature map
+    * idx 1..5 (CONV-2..6): {0,1} int8 NHWC bit maps in / out (spatial dims
+                        halve after the max-pool layers, Table 2)
+    * idx 6 (FC-1):     (N, 4, 4, 512) bit map in — flattened and packed to
+                        (N, 256) int32 words on entry — → (N, 32) words out
+    * idx 7 (FC-2):     (N, 32) int32 packed words in / out
+    * idx 8 (FC-3):     (N, 32) words → (N, 10) float32 logits (Norm only)
+
+    This is the unit the stage-pipelined deployment forward
+    (``parallel/bcnn_pipeline.py``) partitions; ``forward_packed`` is the
+    sequential fold of all ``N_LAYERS`` of them.
+    """
+    from repro.kernels import ops
+    if idx == 0:
+        # layer 1: fp conv (eq. 7) → NormBinarize → {0,1} bits
+        return bitpack.encode_pm1(bconv.fpconv_apply(packed.conv1, h))
+    if 1 <= idx <= 5:
+        return bconv.apply_packed(packed.convs[idx - 1], h,
+                                  maxpool=CONV_SPECS[idx][2], path=path,
+                                  strategy=conv_strategy)
+    if idx in (6, 7):
+        if idx == 6:                                    # conv→fc flatten+pack
+            h = bitpack.pack_bits(h.reshape(h.shape[0], -1))      # (N, 256)
+        bits = blinear.apply_packed(packed.fcs[idx - 6], h, path=path)
+        return bitpack.pack_bits(bits)
+    if idx == 8:
+        # FC-3: XnorDotProduct then Norm (no binarize)
+        y_l = ops.xnor_matmul(h, packed.fc3_w_words, k=packed.fc3_k,
+                              path=path)
+        return norm_only(y_l, packed.fc3_bn, packed.fc3_k)
+    raise ValueError(f"layer index {idx} out of range 0..{N_LAYERS - 1}")
+
+
 def forward_packed(packed: BCNNPacked, x01: jnp.ndarray,
                    path: str = "mxu",
                    conv_strategy: str | None = None) -> jnp.ndarray:
@@ -179,21 +224,11 @@ def forward_packed(packed: BCNNPacked, x01: jnp.ndarray,
     ints (k) that must stay Python values; each XNOR kernel call is jit'd
     internally.
     """
-    from repro.kernels import ops
-    # layer 1: fp conv → NormBinarize → {0,1} bits
-    a_pm1 = bconv.fpconv_apply(packed.conv1, x01)             # ±1
-    a_bits = bitpack.encode_pm1(a_pm1)                        # {0,1}
-    for i, fp in enumerate(packed.convs):
-        a_bits = bconv.apply_packed(fp, a_bits,
-                                    maxpool=CONV_SPECS[i + 1][2], path=path,
-                                    strategy=conv_strategy)
-    words = bitpack.pack_bits(a_bits.reshape(a_bits.shape[0], -1))  # (N, 256)
-    for fp in packed.fcs:
-        bits = blinear.apply_packed(fp, words, path=path)
-        words = bitpack.pack_bits(bits)
-    # FC-3: XnorDotProduct then Norm (no binarize)
-    y_l = ops.xnor_matmul(words, packed.fc3_w_words, k=packed.fc3_k, path=path)
-    return norm_only(y_l, packed.fc3_bn, packed.fc3_k)
+    h = x01
+    for idx in range(N_LAYERS):
+        h = apply_packed_layer(packed, idx, h, path=path,
+                               conv_strategy=conv_strategy)
+    return h
 
 
 def make_packed_forward(packed: BCNNPacked, *, path: str = "mxu",

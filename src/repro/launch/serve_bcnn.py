@@ -11,6 +11,9 @@ Usage (CPU-scale):
     PYTHONPATH=src python -m repro.launch.serve_bcnn --requests 32
     PYTHONPATH=src python -m repro.launch.serve_bcnn --rate 8 --slots 4
         # Poisson arrivals at 8 req/s; --rate 0 submits everything up front
+    PYTHONPATH=src python -m repro.launch.serve_bcnn --pipeline-stages 2
+        # serve through the stage-pipelined multi-device forward
+        # (parallel/bcnn_pipeline.py; see docs/PIPELINE.md)
 """
 from __future__ import annotations
 
@@ -37,6 +40,13 @@ def main(argv=None):
                     help="kernel path (auto: mxu on TPU, xla elsewhere)")
     ap.add_argument("--conv-strategy", default=pc.CONV_STRATEGY,
                     choices=["auto", "direct", "im2col"])
+    ap.add_argument("--pipeline-stages", type=int, default=pc.PIPELINE_STAGES,
+                    help="cut the 9-layer forward into N cost-balanced "
+                         "pipeline stages over the local devices "
+                         "(parallel/bcnn_pipeline.py); 1 = single-device")
+    ap.add_argument("--micro-batch", type=int,
+                    default=pc.PIPELINE_MICRO_BATCH,
+                    help="pipeline streaming granule (with --pipeline-stages)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -44,7 +54,17 @@ def main(argv=None):
     packed = bcnn.fold_model(params)
     eng = BCNNEngine.from_packed(packed, n_slots=args.slots, path=args.path,
                                  conv_strategy=args.conv_strategy,
+                                 pipeline_stages=args.pipeline_stages,
+                                 pipeline_micro_batch=args.micro_batch,
                                  history=max(4096, args.requests))
+    if args.pipeline_stages > 1:
+        plan = eng.forward.plan
+        print(f"pipelined forward: {plan.n_stages} stages over "
+              f"{len(set(eng.forward.devices))} device(s), "
+              f"micro-batch {args.micro_batch}")
+        for s in range(plan.n_stages):
+            print(f"  stage {s}: {' + '.join(plan.stage_layers(s))}  "
+                  f"(cost {plan.stage_costs[s]:.3g})")
     x, _ = SyntheticImages(global_batch=args.requests,
                            seed=args.seed).batch(0)
 

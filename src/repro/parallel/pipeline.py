@@ -15,6 +15,10 @@ to cut a transformer's per-layer cost sequence into stages, and provides:
 
 tests/test_pipeline.py checks the balance invariants and that the
 shard_map pipeline matches the sequential forward bit-for-bit.
+
+The same planning/scheduling machinery, applied to the paper's own
+heterogeneous 9-layer BCNN (conv stages with changing spatial dims + FC
+stages, bit-packed stage boundaries), lives in ``parallel/bcnn_pipeline.py``.
 """
 from __future__ import annotations
 
@@ -39,7 +43,14 @@ else:
 # ---------------------------------------------------------------------------
 
 def layer_costs(cfg, seq_len: int) -> list[float]:
-    """Per-layer forward FLOPs (the C_l of eq. 12 for a transformer)."""
+    """Per-layer forward FLOPs (the C_l of eq. 12 for a transformer).
+
+    ``cfg`` is any LM config from ``repro.configs`` (dense, SwiGLU, or MoE —
+    MoE layers are costed at their activated-expert FLOPs); ``seq_len`` sets
+    the attention term. Returns one cost per layer, length ``cfg.n_layers``.
+    The BCNN analogue — per-layer binary-op counts from the paper's
+    Table 2 — lives in ``parallel/bcnn_pipeline.py``.
+    """
     d, f = cfg.d_model, cfg.d_ff
     hd = cfg.head_dim
     n_q = cfg.n_heads * hd
@@ -53,25 +64,55 @@ def layer_costs(cfg, seq_len: int) -> list[float]:
 
 
 def plan_stages(cfg, n_stages: int, seq_len: int = 4096) -> list[int]:
-    """Stage boundaries (len n_stages+1) minimizing the eq. 12 bottleneck."""
+    """Stage boundaries (len n_stages+1) minimizing the eq. 12 bottleneck.
+
+    Thin wrapper: ``layer_costs`` → ``core.throughput.balance_stages`` (the
+    exact DP also used for the paper's Table 3). ``bounds[s]:bounds[s+1]``
+    is the half-open layer range of stage ``s``.
+    """
     return balance_stages(layer_costs(cfg, seq_len), n_stages)
 
 
-def schedule_1f1b(stage_costs: list[float], n_micro: int) -> dict:
-    """Steady-state model of the 1F1B schedule.
+def stage_costs_from_bounds(costs: list[float],
+                            bounds: list[int]) -> list[float]:
+    """Per-stage summed cost for a ``balance_stages`` partition.
 
-    Returns bubble fraction and relative throughput; the paper's eq. 12
-    corresponds to the n_micro→∞ limit (rate = 1/max stage cost).
+    ``costs`` are per-layer costs; ``bounds`` the n_stages+1 boundary
+    indices. The max of the result is the eq. 12 bottleneck C_max that
+    sets steady-state pipeline throughput.
+    """
+    return [float(sum(costs[bounds[i]:bounds[i + 1]]))
+            for i in range(len(bounds) - 1)]
+
+
+def schedule_1f1b(stage_costs: list[float], n_micro: int, *,
+                  fwd_bwd_mult: float = 3.0) -> dict:
+    """Steady-state model of the microbatch pipeline schedule.
+
+    ``stage_costs`` are per-stage forward costs (any consistent unit),
+    ``n_micro`` the number of microbatches in flight per step, and
+    ``fwd_bwd_mult`` the per-microbatch work multiple relative to one
+    forward: 3.0 models training 1F1B (fwd + ~2× bwd, the default, used by
+    the LM pipeline), 1.0 models the inference-only fill/drain pipeline
+    (``parallel/bcnn_pipeline.py`` — the paper's streaming deployment,
+    where every tick is a forward).
+
+    Returns a dict with ``bubble_fraction`` (fill/drain idle share),
+    ``steady_rate`` (microbatches per unit time once full — the paper's
+    eq. 12 corresponds to the n_micro→∞ limit, rate = 1/C_max),
+    ``efficiency`` (ideal/real step time), and ``balance``
+    (mean/max stage cost; 1.0 ⇔ perfectly equalized stages, the §4.3
+    optimality condition).
     """
     s = len(stage_costs)
     c_max = max(stage_costs)
     total = sum(stage_costs)
-    # per-microbatch fwd+bwd cost ≈ 3× fwd; pipeline fill+drain = (s−1) slots
-    t_ideal = n_micro * 3 * c_max
-    t_real = t_ideal + (s - 1) * 3 * c_max
+    # per-microbatch cost = fwd_bwd_mult × fwd; fill+drain = (s−1) slots
+    t_ideal = n_micro * fwd_bwd_mult * c_max
+    t_real = t_ideal + (s - 1) * fwd_bwd_mult * c_max
     bubble = (s - 1) / (n_micro + s - 1)
     return {"bubble_fraction": bubble,
-            "steady_rate": 1.0 / (3 * c_max),
+            "steady_rate": 1.0 / (fwd_bwd_mult * c_max),
             "efficiency": t_ideal / t_real,
             "balance": total / (s * c_max)}
 
@@ -155,7 +196,14 @@ def pipelined_forward(stack_params, x, *, mesh, axis: str, apply_fn,
 
 
 def sequential_forward(stack_params, x, *, apply_fn):
-    """Reference: the same stacked layers without pipelining."""
+    """Reference: the same stacked layers without pipelining.
+
+    ``stack_params`` is the (L, …) stacked pytree ``pipelined_forward``
+    takes; ``x`` is either one microbatch (ndim ≤ 2 leading data dims) or a
+    stack of them (vmapped over the leading axis). Used by
+    tests/test_pipeline.py as the bit-for-bit oracle of the ppermute
+    pipeline.
+    """
     def body(c, lp):
         return apply_fn(lp, c), None
 
@@ -169,6 +217,8 @@ def elastic_stage_plan(costs: list[float], n_stages_old: int,
                        n_stages_new: int) -> tuple[list[int], list[int]]:
     """Re-balance stages when the pipeline width changes (elastic scaling).
 
+    ``costs`` are per-layer costs (``layer_costs`` or any other model);
+    ``n_stages_old``/``n_stages_new`` the pipeline widths before and after.
     Returns (old_bounds, new_bounds); parameters move between stages
     according to the boundary diff — used by train/checkpoint elastic
     restore to compute the minimal re-layout.

@@ -21,6 +21,13 @@ eq. 8 comparators):
   (``serve/slots.latency_stats``: p50/p95/p99) — the measured curve behind
   ``benchmarks/fig7.py --online``.
 
+The step's forward can be the single-device packed closure
+(``core/bcnn.py::make_packed_forward``) or — with
+``from_packed(pipeline_stages=N)`` — the stage-pipelined multi-device
+forward (``parallel/bcnn_pipeline.py``), the software analogue of the
+paper's per-layer spatial pipeline; the serving contracts above hold for
+both.
+
 Entry points: ``launch/serve_bcnn.py`` (CLI service loop),
 ``examples/serve_bcnn_cifar10.py`` (Poisson arrival demo).
 """
@@ -48,9 +55,17 @@ def _resolve_path(path: str) -> str:
 class BCNNEngine:
     """Continuous streaming engine over a one-shot image classifier.
 
-    ``forward_fn``: ``(n_slots, H, W, C) float32 → (n_slots, n_classes)``;
-    it is jit'd here, once, and must be shape-only (no per-call statics) —
-    use ``BCNNEngine.from_packed`` for the paper's BCNN.
+    ``forward_fn``: ``(n_slots, H, W, C) float32 → (n_slots, n_classes)``.
+    Two kinds are accepted:
+
+    * a plain shape-only function (no per-call statics) — jit'd here, once;
+      use ``BCNNEngine.from_packed`` for the paper's BCNN;
+    * a *self-jitting* forward that manages its own compilation and exposes
+      a ``cache_size()`` method — e.g. the stage-pipelined
+      ``parallel/bcnn_pipeline.py::PipelinedForward``, whose per-stage jits
+      must not be re-wrapped in an outer jit (the host-side micro-batch
+      streaming loop IS the schedule). It is used as-is and its
+      ``cache_size()`` backs ``step_cache_size``.
     """
 
     def __init__(self, forward_fn: Callable, *, n_slots: int = 8,
@@ -61,20 +76,53 @@ class BCNNEngine:
         self.input_shape = tuple(input_shape)
         self.sched = SlotScheduler(n_slots, clock=clock, history=history)
         self._x = np.zeros((n_slots, *self.input_shape), np.float32)
-        # wrap in a per-engine lambda: jax keys its compilation cache on the
-        # function object, so two engines sharing one forward_fn would also
-        # share (and cross-pollute) the step_cache_size compile counter
-        self._step_fn = jax.jit(lambda x: forward_fn(x))
+        self._self_jitting = hasattr(forward_fn, "cache_size")
+        if self._self_jitting:
+            # e.g. PipelinedForward: owns one jit per pipeline stage (do
+            # NOT share one instance across engines — same cache-pollution
+            # rule as below)
+            self._step_fn = forward_fn
+        else:
+            # wrap in a per-engine lambda: jax keys its compilation cache
+            # on the function object, so two engines sharing one
+            # forward_fn would also share (and cross-pollute) the
+            # step_cache_size compile counter
+            self._step_fn = jax.jit(lambda x: forward_fn(x))
         self._steps = 0
 
     @classmethod
     def from_packed(cls, packed: bcnn.BCNNPacked, *, n_slots: int = 8,
                     path: str = "auto", conv_strategy: str | None = None,
-                    **kw) -> "BCNNEngine":
-        """Engine over the packed deployment forward (paper Fig. 3 path)."""
-        fwd = bcnn.make_packed_forward(packed, path=_resolve_path(path),
-                                       conv_strategy=conv_strategy)
+                    pipeline_stages: int = 1,
+                    pipeline_micro_batch: int = 1,
+                    pipeline_devices=None, **kw) -> "BCNNEngine":
+        """Engine over the packed deployment forward (paper Fig. 3 path).
+
+        ``pipeline_stages > 1`` serves through the stage-pipelined
+        multi-device forward (``parallel/bcnn_pipeline.py``) instead of the
+        single-device ``core/bcnn.py::make_packed_forward``: the 9 layers
+        are cost-balanced onto ``pipeline_devices`` (default all local
+        devices) and slot images stream through in
+        ``pipeline_micro_batch``-sized granules. The serving contracts are
+        unchanged — occupancy stays data, ``step_cache_size`` stays 1.
+        """
+        if pipeline_stages > 1:
+            from repro.parallel.bcnn_pipeline import make_pipelined_forward
+            fwd = make_pipelined_forward(
+                packed, n_stages=pipeline_stages,
+                micro_batch=pipeline_micro_batch, devices=pipeline_devices,
+                path=_resolve_path(path), conv_strategy=conv_strategy)
+        else:
+            fwd = bcnn.make_packed_forward(packed, path=_resolve_path(path),
+                                           conv_strategy=conv_strategy)
         return cls(fwd, n_slots=n_slots, **kw)
+
+    @property
+    def forward(self) -> Callable:
+        """The step's forward (the jit-wrapped closure, or the self-jitting
+        ``PipelinedForward`` — whose ``plan``/``devices`` callers may
+        inspect for logging)."""
+        return self._step_fn
 
     # ------------------------------------------------------------------ api
     def submit(self, image: np.ndarray) -> int:
@@ -121,8 +169,11 @@ class BCNNEngine:
 
     @property
     def step_cache_size(self) -> int:
-        """Number of distinct compilations of the jit'd step. The streaming
+        """Number of distinct compilations of the jit'd step (for a
+        pipelined forward: of its most-recompiled stage). The streaming
         contract is that this stays 1 across any occupancy pattern."""
+        if self._self_jitting:
+            return int(self._step_fn.cache_size())
         return int(self._step_fn._cache_size())
 
     def stats(self, last_n: int | None = None) -> dict:

@@ -16,7 +16,8 @@ def _load_checker():
 
 
 def test_required_docs_exist():
-    for f in ("README.md", "docs/ARCHITECTURE.md", "benchmarks/README.md",
+    for f in ("README.md", "docs/ARCHITECTURE.md", "docs/SERVING.md",
+              "docs/PIPELINE.md", "benchmarks/README.md",
               "src/repro/kernels/README.md"):
         assert (ROOT / f).exists(), f"missing required doc: {f}"
 
@@ -34,6 +35,10 @@ def test_readme_and_architecture_cross_link():
     arch = (ROOT / "docs/ARCHITECTURE.md").read_text()
     assert "docs/ARCHITECTURE.md" in readme
     assert "README.md" in arch
+    # the operator guides are reachable from both entry docs
+    for doc in ("docs/SERVING.md", "docs/PIPELINE.md"):
+        assert doc in readme, f"README.md does not link {doc}"
+        assert doc in arch, f"docs/ARCHITECTURE.md does not link {doc}"
 
 
 def test_checker_catches_rot(tmp_path):
@@ -49,3 +54,22 @@ def test_checker_catches_rot(tmp_path):
         rotted.unlink()
     assert len(problems) == 2 and all("broken" in p for p in problems)
     assert not good_problems
+
+
+def test_checker_catches_symbol_rot(tmp_path):
+    """`file.py::symbol` references are validated against the AST: a real
+    symbol passes, a renamed/removed one (and a method) fails. (Path tokens
+    resolve against the repo root, so the probe can live in tmp_path.)"""
+    chk = _load_checker()
+    rotted = tmp_path / "_rot_probe_symbols.md"
+    rotted.write_text(
+        "ok: `core/bcnn.py::forward_packed` and "
+        "`serve/slots.py::SlotScheduler.submit` and "
+        "`core/bitpack.py::PACK`\n"
+        "rot: `core/bcnn.py::no_such_function` and "
+        "`serve/slots.py::SlotScheduler.no_such_method`\n")
+    problems = chk.check_file(rotted)
+    assert len(problems) == 2, problems
+    assert all("broken symbol" in p for p in problems)
+    assert any("no_such_function" in p for p in problems)
+    assert any("SlotScheduler.no_such_method" in p for p in problems)
