@@ -32,27 +32,38 @@ Three layers of reproduction:
    harness forces ≥2 simulated host devices (XLA_FLAGS, set below before
    jax imports) so the multi-device path is exercised.
 
+5. **Measured, offline data-parallel (``--offline``)** — the paper's
+   *large-batch* scenario ("static data in large batch sizes", §6.3):
+   throughput vs batch size × device count through the batch-sharded
+   data-parallel forward (parallel/bcnn_data_parallel.py), including a
+   ragged-batch bit-exactness check against ``forward_packed`` and the
+   one-compile-per-plan guard. Uses the same simulated-device shim as
+   ``--pipeline``.
+
+Every ``--json`` dump embeds the deployment-plan metadata
+(shards / stages / micro-batch) alongside the curves, so a dumped curve
+is reproducible from the artifact alone (schema pinned by
+tests/test_fig7_schema.py).
+
 Run:  PYTHONPATH=src python benchmarks/fig7.py
-          [--online | --pipeline] [--json out.json]
+          [--online | --pipeline | --offline] [--json out.json]
 """
 from __future__ import annotations
 
 import argparse
 import json
-import os
 import sys
 import time
 
-# --pipeline needs >1 device to demonstrate multi-device staging; on a
-# plain-CPU host, simulate them. Must happen before jax is first imported
-# (XLA reads the flag at backend init), hence this pre-import shim keyed on
-# the raw argv ("fig7-pipeline" covers `-m benchmarks.run --only ...`).
-if (any(a in ("--pipeline", "fig7-pipeline") for a in sys.argv)
-        and "xla_force_host_platform_device_count"
-        not in os.environ.get("XLA_FLAGS", "")):
-    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                               + " --xla_force_host_platform_device_count=2"
-                               ).strip()
+# --pipeline/--offline need >1 device to demonstrate multi-device scaling;
+# on a plain-CPU host, simulate them before jax's first import (see
+# src/repro/launch/device_shim.py for the contract), keyed on the raw
+# argv ("fig7-*" covers `-m benchmarks.run --only ...`).
+from repro.launch.device_shim import force_host_devices
+
+if any(a in ("--pipeline", "fig7-pipeline", "--offline", "fig7-offline")
+       for a in sys.argv):
+    force_host_devices(2)
 
 import jax
 import jax.numpy as jnp
@@ -118,6 +129,29 @@ def measured_curve(batches=(1, 4, 16, 64), reps: int = 3,
     return out
 
 
+def _occupancy_sweep(eng: BCNNEngine, n_slots: int, rng, reps: int) -> dict:
+    """Step wall-clock with k of n_slots live, k = 1..n_slots — the
+    measured flat-vs-occupancy curve (the paper's Fig. 7 FPGA analogue),
+    shared by the online and pipelined harnesses so both measure the same
+    way. Image generation + submission happen off the clock (the curve
+    under test is the engine *step*, not host-side O(k) prep); timings
+    are averaged over ``reps``."""
+    occ = {"occupancy": [], "step_ms": [], "us_per_live_img": []}
+    for k in range(1, n_slots + 1):
+        dt = 0.0
+        for _ in range(reps):
+            for img in rng.random((k, 32, 32, 3), np.float32):
+                eng.submit(img)
+            t0 = time.perf_counter()
+            eng.run()
+            dt += time.perf_counter() - t0
+        dt /= reps
+        occ["occupancy"].append(k)
+        occ["step_ms"].append(dt * 1e3)
+        occ["us_per_live_img"].append(dt / k * 1e6)
+    return occ
+
+
 def online_curve(n_slots: int = pc.SERVE_N_SLOTS, n_requests: int = 24,
                  load_fracs=pc.FIG7_ONLINE_LOAD_FRACS, reps: int = 2,
                  conv_strategy: str = pc.CONV_STRATEGY,
@@ -141,21 +175,7 @@ def online_curve(n_slots: int = pc.SERVE_N_SLOTS, n_requests: int = 24,
     eng.warmup()
     rng = np.random.default_rng(seed)
 
-    occ = {"occupancy": [], "step_ms": [], "us_per_live_img": []}
-    for k in range(1, n_slots + 1):
-        dt = 0.0
-        for _ in range(reps):
-            # image generation + submission happen off the clock: the flat
-            # curve under test is the engine *step*, not host-side O(k) prep
-            for img in rng.random((k, 32, 32, 3), np.float32):
-                eng.submit(img)
-            t0 = time.perf_counter()
-            eng.run()
-            dt += time.perf_counter() - t0
-        dt /= reps
-        occ["occupancy"].append(k)
-        occ["step_ms"].append(dt * 1e3)
-        occ["us_per_live_img"].append(dt / k * 1e6)
+    occ = _occupancy_sweep(eng, n_slots, rng, reps)
     compiles = eng.step_cache_size
     assert compiles == 1, (
         f"BCNN step recompiled: jit cache size {compiles} after occupancy "
@@ -178,7 +198,9 @@ def online_curve(n_slots: int = pc.SERVE_N_SLOTS, n_requests: int = 24,
     return {"n_slots": n_slots, "n_requests": n_requests,
             "step_compilations": compiles, "capacity_hz": cap_hz,
             "occupancy_sweep": occ, "load_sweep": load,
-            "conv_strategy": conv_strategy}
+            "conv_strategy": conv_strategy,
+            "plan": {"data_shards": 1, "n_stages": 1, "micro_batch": None,
+                     "n_slots": n_slots}}
 
 
 def run_online(verbose: bool = True, **kw) -> dict:
@@ -258,14 +280,7 @@ def pipeline_curve(stage_counts=pc.FIG7_PIPELINE_STAGE_COUNTS,
                                      pipeline_stages=s,
                                      pipeline_micro_batch=1)
         eng.warmup()
-        occ = {"occupancy": [], "step_ms": []}
-        for k in range(1, n_slots + 1):
-            for img in rng.random((k, 32, 32, 3), np.float32):
-                eng.submit(img)
-            t0 = time.perf_counter()
-            eng.run()
-            occ["occupancy"].append(k)
-            occ["step_ms"].append((time.perf_counter() - t0) * 1e3)
+        occ = _occupancy_sweep(eng, n_slots, rng, reps)
         compiles = eng.step_cache_size
         assert compiles == 1, (
             f"pipelined step recompiled: per-stage jit cache {compiles} "
@@ -273,6 +288,8 @@ def pipeline_curve(stage_counts=pc.FIG7_PIPELINE_STAGE_COUNTS,
 
         out["stages"].append({
             "n_stages": s,
+            "plan": {"data_shards": 1, "n_stages": s,
+                     "micro_batch": micro_batch},
             "bounds": list(plan.bounds),
             "stage_layers": [" + ".join(plan.stage_layers(i))
                              for i in range(s)],
@@ -311,9 +328,102 @@ def run_pipeline(verbose: bool = True, **kw) -> dict:
     return res
 
 
+def offline_curve(batch_sizes=pc.FIG7_OFFLINE_BATCH_SIZES,
+                  shard_counts=pc.FIG7_DATA_SHARD_COUNTS,
+                  micro_batch: int = pc.DATA_MICRO_BATCH,
+                  n_stages: int = 1, reps: int = 2,
+                  conv_strategy: str = pc.CONV_STRATEGY,
+                  seed: int = 0) -> dict:
+    """Measured large-batch data-parallel curves (the paper's §6.3
+    "static data in large batch sizes" scenario).
+
+    For each device-shard count: build the batch-sharded forward
+    (``parallel/bcnn_data_parallel.py::make_sharded_forward``), verify
+    bit-exactness against ``forward_packed`` on a ragged batch, then sweep
+    ``batch_sizes`` measuring end-to-end throughput. Every point reuses
+    the ONE compiled chunk shape — the compile-count guard is asserted
+    after the whole sweep. Shard counts the host cannot place (shards ×
+    stages > devices) are reported in ``"skipped"`` rather than silently
+    dropped. Each curve embeds its full deployment-plan metadata.
+    """
+    from repro.parallel.bcnn_data_parallel import make_sharded_forward
+
+    params = bcnn.init(jax.random.PRNGKey(seed))
+    packed = bcnn.fold_model(params)
+    rng = np.random.default_rng(seed)
+    out = {"devices": [str(d) for d in jax.devices()],
+           "conv_strategy": conv_strategy, "n_stages": n_stages,
+           "micro_batch": micro_batch, "curves": [], "skipped": []}
+    for shards in shard_counts:
+        if shards * n_stages > len(jax.devices()):
+            out["skipped"].append(
+                {"data_shards": shards,
+                 "reason": f"{shards} shard(s) × {n_stages} stage(s) needs "
+                           f"{shards * n_stages} devices, have "
+                           f"{len(jax.devices())}"})
+            continue
+        fwd = make_sharded_forward(packed, data_shards=shards,
+                                   micro_batch=micro_batch,
+                                   n_stages=n_stages, path="xla",
+                                   conv_strategy=conv_strategy)
+        # bit-exactness on a ragged batch (one past a full chunk)
+        xr = rng.random((fwd.plan.chunk + 1, 32, 32, 3)).astype(np.float32)
+        ref = np.asarray(bcnn.forward_packed(packed, jnp.asarray(xr),
+                                             path="xla",
+                                             conv_strategy=conv_strategy))
+        np.testing.assert_array_equal(np.asarray(fwd(xr)), ref)
+        curve = {"plan": fwd.plan.describe(), "batch": [], "img_per_s": [],
+                 "us_per_img": []}
+        for b in batch_sizes:
+            x = rng.random((b, 32, 32, 3)).astype(np.float32)
+            jax.block_until_ready(fwd(x))                        # warm
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                jax.block_until_ready(fwd(x))
+            dt = (time.perf_counter() - t0) / reps
+            curve["batch"].append(b)
+            curve["img_per_s"].append(b / dt)
+            curve["us_per_img"].append(dt / b * 1e6)
+        compiles = fwd.cache_size()
+        assert compiles == 1, (
+            f"sharded forward recompiled: cache size {compiles} after "
+            f"batch sweep {list(batch_sizes)} at {shards} shard(s) "
+            f"(contract is exactly one compile per plan)")
+        curve["compilations"] = compiles
+        out["curves"].append(curve)
+    return out
+
+
+def run_offline(verbose: bool = True, **kw) -> dict:
+    res = offline_curve(**kw)
+    if verbose:
+        print(f"offline data-parallel batch serving "
+              f"({len(res['devices'])} device(s), XLA-on-CPU, per-shard "
+              f"micro-batch {res['micro_batch']}):")
+        for c in res["curves"]:
+            p = c["plan"]
+            print(f"  {p['data_shards']} shard(s) × {p['n_stages']} "
+                  f"stage(s) (chunk {p['chunk']}), compiled "
+                  f"{c['compilations']}×:")
+            for b, ips, us in zip(c["batch"], c["img_per_s"],
+                                  c["us_per_img"]):
+                print(f"    batch {b:4d}: {ips:8.1f} img/s  "
+                      f"{us:9.0f} us/img")
+        for s in res["skipped"]:
+            print(f"  skipped {s['data_shards']} shard(s): {s['reason']}")
+        if len(res["curves"]) > 1:
+            base, top = res["curves"][0], res["curves"][-1]
+            speedup = top["img_per_s"][-1] / base["img_per_s"][-1]
+            print(f"  large-batch speedup "
+                  f"{top['plan']['data_shards']}÷"
+                  f"{base['plan']['data_shards']} shards: {speedup:.2f}×")
+    return res
+
+
 def run(verbose: bool = True, measure: bool = True) -> dict:
     pa = paper_curves()
-    res = {"paper": pa}
+    res = {"paper": pa,
+           "plan": {"data_shards": 1, "n_stages": 1, "micro_batch": None}}
     if verbose:
         print("paper analytic (XNOR GPU kernel vs our FPGA config):")
         print(f"{'batch':>6s} {'FPGA FPS':>9s} {'GPU FPS':>9s} "
@@ -366,13 +476,22 @@ if __name__ == "__main__":
                     help="measure the stage-pipelined multi-device forward "
                          "(parallel/bcnn_pipeline.py); on CPU this forces "
                          ">=2 simulated devices")
+    ap.add_argument("--offline", action="store_true",
+                    help="measure the large-batch data-parallel sweep "
+                         "(parallel/bcnn_data_parallel.py): batch size × "
+                         "device-shard count; on CPU this forces >=2 "
+                         "simulated devices")
     ap.add_argument("--slots", type=int, default=pc.SERVE_N_SLOTS)
     ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--reps", type=int, default=2,
+                    help="timing repetitions per measured point (--offline)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump the result dict as JSON")
     args = ap.parse_args()
     if args.pipeline:
         out = run_pipeline(n_slots=args.slots)
+    elif args.offline:
+        out = run_offline(reps=args.reps)
     elif args.online:
         out = run_online(n_slots=args.slots, n_requests=args.requests)
     else:

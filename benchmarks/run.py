@@ -6,29 +6,36 @@
 from __future__ import annotations
 
 import argparse
-import os
 import time
+
+from repro.launch.device_shim import force_host_devices
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     choices=["all", "table3", "table5", "fig7",
-                             "fig7-online", "fig7-pipeline", "roofline",
-                             "kernels"])
+                             "fig7-online", "fig7-pipeline", "fig7-offline",
+                             "roofline", "kernels"])
     ap.add_argument("--no-measure", action="store_true",
                     help="skip wall-clock measurements (CI mode)")
     args = ap.parse_args(argv)
 
-    if args.only in ("all", "fig7-pipeline") and not args.no_measure and (
-            "xla_force_host_platform_device_count"
-            not in os.environ.get("XLA_FLAGS", "")):
-        # the pipeline bench needs >=2 devices to demonstrate multi-device
-        # staging; set the flag before any benchmark module imports jax
-        # (same shim benchmarks/fig7.py applies for its own CLI)
-        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                                   + " --xla_force_host_platform_device_count"
-                                     "=2").strip()
+    if args.only in ("all", "fig7-pipeline", "fig7-offline") \
+            and not args.no_measure:
+        # the pipeline/offline benches need >=2 devices to demonstrate
+        # multi-device scaling; set the flag before any benchmark module
+        # imports jax (see src/repro/launch/device_shim.py — same shim
+        # benchmarks/fig7.py applies for its own CLI)
+        force_host_devices(2)
+        if args.only == "all":
+            # the forced split applies to EVERY bench in this process, so
+            # an `all` run's single-device wall-clocks are not comparable
+            # with standalone runs — say so rather than skew silently
+            print("note: forcing 2 simulated host devices for the "
+                  "multi-device benches; single-device measured numbers "
+                  "in this run are not comparable with standalone "
+                  "`benchmarks/<script>.py` invocations")
 
     results = []
 
@@ -45,10 +52,11 @@ def main(argv=None) -> None:
     bench("table3", lambda: table3.run())
     bench("table5", lambda: table5.run())
     bench("fig7", lambda: fig7.run(measure=not args.no_measure))
-    if not args.no_measure:      # the online/pipeline benches ARE measurement
+    if not args.no_measure:      # the serving benches ARE measurement
         bench("fig7-online", lambda: fig7.run_online())
         bench("fig7-pipeline", lambda: fig7.run_pipeline())
-    elif args.only in ("fig7-online", "fig7-pipeline"):
+        bench("fig7-offline", lambda: fig7.run_offline())
+    elif args.only in ("fig7-online", "fig7-pipeline", "fig7-offline"):
         print(f"{args.only} skipped: it is pure wall-clock measurement and "
               "--no-measure was given")
     bench("kernels", lambda: kernels.run(measure=not args.no_measure))

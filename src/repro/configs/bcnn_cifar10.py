@@ -40,6 +40,20 @@ PIPELINE_STAGES = 1
 PIPELINE_MICRO_BATCH = 1
 FIG7_PIPELINE_STAGE_COUNTS = (1, 2, 3)
 
+# Data-parallel batch serving (parallel/bcnn_data_parallel.py): the
+# paper's large-batch Fig. 7 scenario. DATA_SHARDS replicates the packed
+# network over that many devices and splits bulk batches across them
+# (0 = bulk path disabled — slot streaming only); DATA_MICRO_BATCH is the
+# per-shard granule, so DATA_SHARDS × DATA_MICRO_BATCH is the one jit'd
+# chunk shape (and the default BCNNEngine.classify_batch routing
+# threshold). The `benchmarks/fig7.py --offline` sweep crosses
+# FIG7_OFFLINE_BATCH_SIZES with FIG7_DATA_SHARD_COUNTS on (simulated)
+# devices.
+DATA_SHARDS = 0
+DATA_MICRO_BATCH = 8
+FIG7_OFFLINE_BATCH_SIZES = (4, 8, 16, 32, 64)
+FIG7_DATA_SHARD_COUNTS = (1, 2)
+
 # Paper Fig. 7 reported numbers (digitized): throughput in FPS and
 # energy-efficiency ratios used by benchmarks/fig7.py for validation.
 PAPER_FPGA_FPS = 6218              # batch-size-invariant (the paper's claim)

@@ -9,14 +9,14 @@ from __future__ import annotations
 import jax
 
 
-def _make_mesh(shape, axes):
+def _make_mesh(shape, axes, devices=None):
     # jax.sharding.AxisType landed after 0.4.x; Auto is the default there,
     # so omit the kwarg on older versions instead of crashing at call time.
     if hasattr(jax.sharding, "AxisType"):
         return jax.make_mesh(
-            shape, axes,
+            shape, axes, devices=devices,
             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-    return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, devices=devices)
 
 
 def make_production_mesh(*, multi_pod: bool = False, pods: int = 0):
@@ -39,3 +39,21 @@ def dp_axes(mesh) -> tuple[str, ...]:
 def make_local_mesh():
     """1-device mesh with the production axis names (tests/examples)."""
     return _make_mesh((1, 1), ("data", "model"))
+
+
+def make_data_mesh(n_shards: int, devices=None):
+    """(n_shards, 1) mesh over ("data", "model") — the pure data-parallel
+    deployment mesh (parallel/bcnn_data_parallel.py). Carrying the trivial
+    "model" axis keeps the production axis names, so the sharding helpers
+    (parallel/sharding.py: ``dp_axes``/``batch_spec``) apply unchanged.
+
+    ``devices``: explicit device list (first ``n_shards`` are used); default
+    ``jax.devices()``.
+    """
+    if devices is None:
+        devices = jax.devices()
+    if n_shards > len(devices):
+        raise ValueError(f"data mesh needs {n_shards} devices, have "
+                         f"{len(devices)}")
+    return _make_mesh((n_shards, 1), ("data", "model"),
+                      devices=list(devices)[:n_shards])

@@ -14,11 +14,22 @@ Usage (CPU-scale):
     PYTHONPATH=src python -m repro.launch.serve_bcnn --pipeline-stages 2
         # serve through the stage-pipelined multi-device forward
         # (parallel/bcnn_pipeline.py; see docs/PIPELINE.md)
+    PYTHONPATH=src python -m repro.launch.serve_bcnn --data-shards 2 \
+        --offline --requests 64
+        # the paper's large-batch scenario: one bulk batch through the
+        # batch-sharded data-parallel forward
+        # (parallel/bcnn_data_parallel.py; see docs/SERVING.md)
 """
 from __future__ import annotations
 
 import argparse
 import time
+
+# --data-shards N needs N devices; on a plain-CPU host, simulate them
+# before jax's first import (see launch/device_shim.py for the contract).
+from repro.launch.device_shim import argv_flag_value, force_host_devices
+
+force_host_devices(argv_flag_value("--data-shards"))
 
 import jax
 import numpy as np
@@ -47,6 +58,18 @@ def main(argv=None):
     ap.add_argument("--micro-batch", type=int,
                     default=pc.PIPELINE_MICRO_BATCH,
                     help="pipeline streaming granule (with --pipeline-stages)")
+    ap.add_argument("--data-shards", type=int, default=pc.DATA_SHARDS,
+                    help="replicate the packed network over N devices and "
+                         "shard bulk batches across them "
+                         "(parallel/bcnn_data_parallel.py); 0 = disabled")
+    ap.add_argument("--data-micro-batch", type=int,
+                    default=pc.DATA_MICRO_BATCH,
+                    help="per-shard granule of the data-parallel forward "
+                         "(with --data-shards)")
+    ap.add_argument("--offline", action="store_true",
+                    help="serve all --requests images as ONE bulk batch "
+                         "through classify_batch (the paper's large-batch "
+                         "scenario) instead of streaming them")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -56,6 +79,8 @@ def main(argv=None):
                                  conv_strategy=args.conv_strategy,
                                  pipeline_stages=args.pipeline_stages,
                                  pipeline_micro_batch=args.micro_batch,
+                                 data_shards=args.data_shards,
+                                 data_micro_batch=args.data_micro_batch,
                                  history=max(4096, args.requests))
     if args.pipeline_stages > 1:
         plan = eng.forward.plan
@@ -65,8 +90,28 @@ def main(argv=None):
         for s in range(plan.n_stages):
             print(f"  stage {s}: {' + '.join(plan.stage_layers(s))}  "
                   f"(cost {plan.stage_costs[s]:.3g})")
+    if eng.batch_forward is not None:
+        plan = eng.batch_forward.plan
+        print(f"data-parallel bulk forward: {plan.data_shards} shard(s) × "
+              f"{plan.n_stages} stage(s), micro-batch {plan.micro_batch} "
+              f"(chunk {plan.chunk}; classify_batch routes batches >= "
+              f"{eng.batch_threshold})")
     x, _ = SyntheticImages(global_batch=args.requests,
                            seed=args.seed).batch(0)
+
+    if args.offline:
+        # warm (one compile per plan — any batch size reuses it), then time
+        eng.classify_batch(x)
+        t0 = time.perf_counter()
+        logits = eng.classify_batch(x)
+        dt = time.perf_counter() - t0
+        assert logits.shape == (args.requests, pc.N_CLASSES)
+        routed = ("data-parallel forward" if eng.batch_forward is not None
+                  and args.requests >= eng.batch_threshold else "slot path")
+        print(f"offline batch of {args.requests}: {args.requests/dt:.1f} "
+              f"img/s ({dt*1e3:.0f} ms wall, via {routed}; bulk forward "
+              f"compiled {eng.batch_cache_size}×)")
+        return 0
 
     if args.rate > 0:
         d = drive_poisson(eng, x, args.rate, seed=args.seed)

@@ -154,6 +154,21 @@ def unpack_boundary(i: int, h: jnp.ndarray) -> jnp.ndarray:
     return h
 
 
+def pad_rows(x: jnp.ndarray, n_rows: int) -> jnp.ndarray:
+    """Zero-pad dim 0 of ``x`` up to ``n_rows`` (no-op when already there).
+
+    The shared ragged-tail contract of the streaming forwards: batches are
+    padded to the fixed jit'd granule with zero rows and the results
+    sliced back, so rows never mix and no new shape is ever compiled.
+    Used by ``PipelinedForward`` and the data-parallel
+    ``parallel/bcnn_data_parallel.py::ShardedForward``.
+    """
+    if x.shape[0] == n_rows:
+        return x
+    return jnp.concatenate(
+        [x, jnp.zeros((n_rows - x.shape[0], *x.shape[1:]), x.dtype)])
+
+
 def _make_stage_fn(packed: bcnn.BCNNPacked, a: int, b: int, *, path: str,
                    conv_strategy: str | None) -> Callable:
     """Closure applying layers [a, b): unpack → layers → pack, jit-ready.
@@ -220,10 +235,7 @@ class PipelinedForward:
             return jnp.zeros((0, self._n_classes), jnp.float32)
         mb = self.micro_batch
         n_micro = -(-n // mb)
-        x = jnp.asarray(x01)
-        if n_micro * mb != n:                       # ragged: pad the tail
-            x = jnp.concatenate(
-                [x, jnp.zeros((n_micro * mb - n, *x.shape[1:]), x.dtype)])
+        x = pad_rows(jnp.asarray(x01), n_micro * mb)    # ragged tail
         s_n = self.n_stages
         # classic software pipeline: at tick t, stage s holds micro-batch
         # t−s. bufs[s] = stage s's output from the previous tick; iterating
@@ -257,10 +269,7 @@ class PipelinedForward:
         """Measured per-stage seconds for one micro-batch (blocking each
         stage in turn — a diagnostic for the eq. 12 balance, not the
         pipelined wall-clock). Feeds the fig7 ``--pipeline`` stage table."""
-        h = jnp.asarray(x01[:self.micro_batch])
-        if h.shape[0] < self.micro_batch:
-            h = jnp.concatenate([h, jnp.zeros(
-                (self.micro_batch - h.shape[0], *h.shape[1:]), h.dtype)])
+        h = pad_rows(jnp.asarray(x01[:self.micro_batch]), self.micro_batch)
         times = []
         for s, fn in enumerate(self._stage_fns):
             h = jax.device_put(h, self.devices[s])

@@ -28,6 +28,13 @@ forward (``parallel/bcnn_pipeline.py``), the software analogue of the
 paper's per-layer spatial pipeline; the serving contracts above hold for
 both.
 
+The paper's *other* Fig. 7 scenario — "static data in large batch sizes"
+(§6.3) — is served by ``classify_batch``: with
+``from_packed(data_shards=N)`` the engine also owns a batch-sharded
+data-parallel forward (``parallel/bcnn_data_parallel.py``), and a bulk
+batch at or above ``batch_threshold`` bypasses the slots entirely while
+smaller ones stream through them unchanged.
+
 Entry points: ``launch/serve_bcnn.py`` (CLI service loop),
 ``examples/serve_bcnn_cifar10.py`` (Poisson arrival demo).
 """
@@ -89,13 +96,20 @@ class BCNNEngine:
             # step_cache_size compile counter
             self._step_fn = jax.jit(lambda x: forward_fn(x))
         self._steps = 0
+        self._batch_fn = None           # set by from_packed(data_shards=N)
+        self._batch_threshold = 0
+        self._n_classes = None          # known for from_packed engines
 
     @classmethod
     def from_packed(cls, packed: bcnn.BCNNPacked, *, n_slots: int = 8,
                     path: str = "auto", conv_strategy: str | None = None,
                     pipeline_stages: int = 1,
                     pipeline_micro_batch: int = 1,
-                    pipeline_devices=None, **kw) -> "BCNNEngine":
+                    pipeline_devices=None,
+                    data_shards: int = 0,
+                    data_micro_batch: int = 8,
+                    batch_threshold: int | None = None,
+                    **kw) -> "BCNNEngine":
         """Engine over the packed deployment forward (paper Fig. 3 path).
 
         ``pipeline_stages > 1`` serves through the stage-pipelined
@@ -105,6 +119,17 @@ class BCNNEngine:
         devices) and slot images stream through in
         ``pipeline_micro_batch``-sized granules. The serving contracts are
         unchanged — occupancy stays data, ``step_cache_size`` stays 1.
+
+        ``data_shards >= 1`` additionally equips the engine for the
+        paper's *large-batch* Fig. 7 scenario: a batch-sharded
+        data-parallel forward
+        (``parallel/bcnn_data_parallel.py::make_sharded_forward``, with
+        ``n_stages=pipeline_stages`` — the 2-D data × stage plan when both
+        are set) that ``classify_batch`` routes to whenever a bulk batch
+        reaches ``batch_threshold`` images (default: one full chunk,
+        ``data_shards × data_micro_batch``). Slot streaming for individual
+        requests is untouched. ``data_shards=0`` (default) disables the
+        bulk path.
         """
         if pipeline_stages > 1:
             from repro.parallel.bcnn_pipeline import make_pipelined_forward
@@ -115,7 +140,18 @@ class BCNNEngine:
         else:
             fwd = bcnn.make_packed_forward(packed, path=_resolve_path(path),
                                            conv_strategy=conv_strategy)
-        return cls(fwd, n_slots=n_slots, **kw)
+        eng = cls(fwd, n_slots=n_slots, **kw)
+        eng._n_classes = packed.fc3_w_words.shape[0]
+        if data_shards >= 1:
+            from repro.parallel.bcnn_data_parallel import make_sharded_forward
+            eng._batch_fn = make_sharded_forward(
+                packed, data_shards=data_shards,
+                micro_batch=data_micro_batch, n_stages=pipeline_stages,
+                path=_resolve_path(path), conv_strategy=conv_strategy)
+            eng._batch_threshold = (eng._batch_fn.plan.chunk
+                                    if batch_threshold is None
+                                    else batch_threshold)
+        return eng
 
     @property
     def forward(self) -> Callable:
@@ -162,10 +198,67 @@ class BCNNEngine:
             results.update(self.step())
         return results
 
+    def classify_batch(self, images: np.ndarray) -> np.ndarray:
+        """Bulk batch → (N, n_classes) logits, in input order.
+
+        The paper's large-batch Fig. 7 scenario: a batch of at least
+        ``batch_threshold`` images (and an engine built with
+        ``from_packed(data_shards=...)``) bypasses the slots and runs
+        through the batch-sharded data-parallel forward
+        (``parallel/bcnn_data_parallel.py``) — one compile per plan, any
+        batch size. Smaller batches stream through the slot scheduler
+        exactly like individually submitted requests. Both routes produce
+        bit-identical logits.
+
+        Single-driver contract (same as ``run``/``drive_poisson``): the
+        slot route drives the engine loop until its own requests finish,
+        so requests already queued by another caller are served alongside
+        but their logits are delivered to THIS loop and dropped (the
+        scheduler retains latency stamps, not results). Route concurrent
+        traffic through one driving loop rather than interleaving
+        ``classify_batch`` with pending ``submit``s.
+        """
+        images = np.asarray(images, np.float32)
+        if images.ndim != 1 + len(self.input_shape) or \
+                images.shape[1:] != self.input_shape:
+            raise ValueError(f"batch shape {images.shape} != (N, "
+                             f"{', '.join(map(str, self.input_shape))})")
+        if self._batch_fn is not None and (
+                len(images) >= self._batch_threshold or len(images) == 0):
+            return np.asarray(
+                jax.block_until_ready(self._batch_fn(jnp.asarray(images))))
+        if len(images) == 0:
+            # width known for from_packed engines; 0 for opaque forwards
+            return np.zeros((0, self._n_classes or 0), np.float32)
+        rids = [self.submit(img) for img in images]
+        out = self.run()
+        return np.stack([out[r] for r in rids])
+
     # ------------------------------------------------------------ accounting
     @property
     def steps_executed(self) -> int:
         return self._steps
+
+    @property
+    def batch_forward(self):
+        """The data-parallel bulk forward
+        (``parallel/bcnn_data_parallel.py::ShardedForward`` — its ``plan``
+        carries the shards/stages/micro-batch metadata), or None when the
+        engine was built without ``data_shards``."""
+        return self._batch_fn
+
+    @property
+    def batch_threshold(self) -> int:
+        """Minimum batch size ``classify_batch`` routes to the bulk
+        data-parallel forward (0 when the bulk path is disabled)."""
+        return self._batch_threshold
+
+    @property
+    def batch_cache_size(self) -> int:
+        """Compilations of the bulk data-parallel forward: 0 before its
+        first use, then exactly 1 per (shards, stages, micro-batch) plan
+        whatever batch sizes ``classify_batch`` has seen."""
+        return 0 if self._batch_fn is None else self._batch_fn.cache_size()
 
     @property
     def step_cache_size(self) -> int:

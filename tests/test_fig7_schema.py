@@ -1,0 +1,78 @@
+"""benchmarks/fig7.py artifact schema: every mode's result dict is
+JSON-serializable and embeds the deployment-plan metadata
+(shards / stages / micro-batch), so a dumped curve is reproducible from
+the artifact alone — the `--json` contract the offline/online/pipeline
+sweeps promise. Runs tiny parameterizations of the real curve functions
+(this process has 1 device, so the offline sweep also exercises the
+explicit ``skipped`` reporting for unplaceable shard counts)."""
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+PLAN_KEYS = {"data_shards", "n_stages", "micro_batch"}
+
+
+def _load_fig7():
+    spec = importlib.util.spec_from_file_location(
+        "fig7", ROOT / "benchmarks" / "fig7.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def fig7():
+    return _load_fig7()
+
+
+def _roundtrip(fig7, res) -> dict:
+    """JSON-serializability is part of the schema (`--json` path)."""
+    return json.loads(json.dumps(fig7._jsonable(res)))
+
+
+def test_offline_schema(fig7):
+    res = _roundtrip(fig7, fig7.offline_curve(
+        batch_sizes=(2, 3), shard_counts=(1, 2), micro_batch=2, reps=1))
+    assert {"devices", "conv_strategy", "curves", "skipped"} <= res.keys()
+    assert len(res["curves"]) >= 1
+    for curve in res["curves"]:
+        assert PLAN_KEYS | {"chunk", "stage_bounds"} <= curve["plan"].keys()
+        assert len(curve["batch"]) == len(curve["img_per_s"]) == 2
+        assert curve["compilations"] == 1
+    # this process sees 1 device: the 2-shard point must be reported as
+    # skipped (no silent truncation of the sweep)
+    if len(res["curves"]) == 1:
+        assert res["skipped"] and res["skipped"][0]["data_shards"] == 2
+        assert "reason" in res["skipped"][0]
+
+
+def test_online_schema(fig7):
+    res = _roundtrip(fig7, fig7.online_curve(
+        n_slots=2, n_requests=3, load_fracs=(0.5,), reps=1))
+    assert PLAN_KEYS <= res["plan"].keys()
+    assert res["plan"]["n_slots"] == res["n_slots"] == 2
+    assert res["step_compilations"] == 1
+    occ = res["occupancy_sweep"]
+    assert len(occ["occupancy"]) == 2 and len(occ["step_ms"]) == 2
+    assert len(res["load_sweep"]["offered_hz"]) == 1
+
+
+@pytest.mark.slow
+def test_pipeline_schema(fig7):
+    res = _roundtrip(fig7, fig7.pipeline_curve(
+        stage_counts=(2,), n_images=4, micro_batch=2, n_slots=2, reps=1))
+    assert len(res["stages"]) == 1
+    st = res["stages"][0]
+    assert PLAN_KEYS <= st["plan"].keys()
+    assert st["plan"]["n_stages"] == st["n_stages"] == 2
+    assert st["step_compilations"] == 1
+
+
+def test_paper_curves_jsonable(fig7):
+    res = _roundtrip(fig7, fig7.run(verbose=False, measure=False))
+    assert PLAN_KEYS <= res["plan"].keys()
+    assert len(res["paper"]["batch"]) == len(res["paper"]["fpga_fps"])

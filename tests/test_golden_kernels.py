@@ -5,6 +5,7 @@ Unlike the oracle-parity tests (test_kernels.py), these pin the kernels to
 hand-computable fixtures — so a refactor that breaks both a kernel and its
 oracle the same way is still caught, without needing a TPU.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -87,6 +88,43 @@ def test_xnor_matmul_golden_fused(path):
                            thr_c=jnp.asarray(C_GOLD, jnp.float32),
                            thr_flip=jnp.asarray(FLIP_GOLD), path=path)
     np.testing.assert_array_equal(np.asarray(bits), np.asarray(BITS_GOLD))
+
+
+# ---------------------------------------------------------------------------
+# Whole-network golden: forward_packed logits on a fixed-seed init() and a
+# formulaic input tile, checked in below. Pins the END-TO-END deployment
+# path (fold + pack + all 9 layers + fused comparators), so a refactor
+# that breaks a kernel AND its oracle the same way — or perturbs the
+# fold/threshold arithmetic — is still caught. The integer XNOR part is
+# exact; the final FC-3 Norm is fp32, hence the small tolerance.
+# ---------------------------------------------------------------------------
+
+LOGITS_SEED = 0
+LOGITS_GOLD = [[-37.9981, -1.9999, 9.9995, 0.0, 43.997803,
+                -5.999701, 7.9996, 57.997105, 5.999701, -55.997204],
+               [-39.998, 71.99641, -23.998802, -5.999701, 33.998302,
+                -63.996803, -13.999301, 7.9996, 23.998802, -5.999701]]
+
+
+def _golden_input_tile():
+    """Deterministic (2, 32, 32, 3) image tile in [0, 1] — a pure formula,
+    so the fixture itself cannot drift with PRNG implementations."""
+    return (np.fromfunction(
+        lambda n, i, j, c: (3 * n + 5 * i + 7 * j + 11 * c) % 29,
+        (2, 32, 32, 3)) / 28.0).astype(np.float32)
+
+
+@pytest.mark.parametrize("conv_strategy", ["direct", "im2col"])
+def test_forward_packed_golden_logits(conv_strategy):
+    from repro.core import bcnn
+    params = bcnn.init(jax.random.PRNGKey(LOGITS_SEED))
+    packed = bcnn.fold_model(params)
+    logits = bcnn.forward_packed(packed, jnp.asarray(_golden_input_tile()),
+                                 path="xla", conv_strategy=conv_strategy)
+    got = np.asarray(logits)
+    want = np.asarray(LOGITS_GOLD, np.float32)
+    np.testing.assert_array_equal(np.argmax(got, -1), np.argmax(want, -1))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
 
 
 def test_binary_weight_matmul_golden():

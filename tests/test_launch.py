@@ -47,3 +47,31 @@ def test_serve_driver_whisper():
         "--slots", "2", "--prompt-len", "3", "--max-new", "3",
         "--max-len", "32"])
     assert rc == 0
+
+
+def test_device_shim_argv_flag_value():
+    from repro.launch.device_shim import argv_flag_value
+    assert argv_flag_value("--data-shards", ["--data-shards", "4"]) == 4
+    assert argv_flag_value("--data-shards", ["--data-shards=2"]) == 2
+    assert argv_flag_value("--data-shards", ["--other", "3"]) == 0
+    assert argv_flag_value("--data-shards", ["--data-shards"]) == 0
+    assert argv_flag_value("--data-shards", ["--data-shards", "oops"]) == 0
+    assert argv_flag_value("--data-shards", ["--data-shards=x"]) == 0
+
+
+def test_device_shim_respects_existing_flags(monkeypatch):
+    """force_host_devices never overrides an operator-pinned count, and is
+    a no-op for n <= 1 (so importing an entry point in THIS jax-initialized
+    process stays harmless)."""
+    from repro.launch.device_shim import force_host_devices
+    monkeypatch.setenv(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    force_host_devices(2)
+    assert os.environ["XLA_FLAGS"] == \
+        "--xla_force_host_platform_device_count=8"
+    monkeypatch.setenv("XLA_FLAGS", "--xla_other_flag")
+    force_host_devices(1)
+    assert os.environ["XLA_FLAGS"] == "--xla_other_flag"
+    force_host_devices(3)
+    assert "device_count=3" in os.environ["XLA_FLAGS"]
+    assert "--xla_other_flag" in os.environ["XLA_FLAGS"]

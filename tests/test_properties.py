@@ -8,12 +8,17 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis "
                     "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import bitpack
+import functools
+
+from repro.core import bcnn, bconv, blinear, bitpack
 from repro.core.normbinarize import BNParams, fold_threshold, norm_binarize
 from repro.core.throughput import balance_stages, pipeline_throughput
 from repro.train import optimizer as opt_lib
 
 SET = settings(max_examples=40, deadline=None)
+# the deployment-path properties run the full 9-layer network both ways
+# per example — keep the example count commensurate
+SET_DEPLOY = settings(max_examples=6, deadline=None)
 
 
 # --------------------------------------------------------------------- bitpack
@@ -29,6 +34,22 @@ def test_pack_unpack_roundtrip(k, rows, seed):
 
 
 @SET
+@given(st.integers(1, 3), st.integers(1, 6), st.integers(1, 6),
+       st.integers(1, 80), st.integers(0, 2 ** 31 - 1))
+def test_pack_unpack_roundtrip_nhwc(n, h, w, c, seed):
+    """The deployment wire format: NHWC bit feature maps packed along the
+    channel axis (how stage/shard boundaries travel between devices —
+    parallel/bcnn_pipeline.py::pack_boundary) round-trip exactly for any
+    spatial shape and any (unaligned) channel count."""
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (n, h, w, c)).astype(np.int8)
+    words = bitpack.pack_bits(bitpack.pad_to_pack(jnp.asarray(bits)))
+    assert words.shape == (n, h, w, bitpack.packed_len(c))
+    back = bitpack.unpack_bits(words, c)
+    np.testing.assert_array_equal(np.asarray(back), bits)
+
+
+@SET
 @given(st.integers(1, 200), st.integers(0, 2 ** 31 - 1))
 def test_xnor_dot_equals_pm1_dot(k, seed):
     """Eq. 5/6: XNOR agree-count ↔ ±1 dot product, any (unaligned) K."""
@@ -40,6 +61,55 @@ def test_xnor_dot_equals_pm1_dot(k, seed):
     y_l = bitpack.xnor_dot(aw[:, None, :], ww[None, :, :], k)
     y = bitpack.pm1_from_xnor(y_l, k)
     np.testing.assert_array_equal(np.asarray(y), (a @ w.T).astype(np.int64))
+
+
+# ------------------------------------------------------------ deployment path
+
+@functools.lru_cache(maxsize=2)
+def _bcnn_model(model_seed: int):
+    """init + fold once per model seed (the expensive part of an example)."""
+    params = bcnn.init(jax.random.PRNGKey(model_seed))
+    return params, bcnn.fold_model(params)
+
+
+@SET_DEPLOY
+@given(st.integers(0, 1), st.integers(0, 2 ** 31 - 1), st.integers(1, 3))
+def test_apply_packed_layer_matches_eval_layerwise(model_seed, input_seed,
+                                                   batch):
+    """Layer-wise parity of the deployment path: every
+    ``apply_packed_layer`` output (bit maps, packed FC words, final Norm
+    logits) equals the fp ``forward_eval`` layer sequence, for randomized
+    model/input seeds and batch sizes. Stronger than the end-to-end logits
+    check in tests/test_bcnn.py: a bug that cancels across layers (or only
+    corrupts an intermediate bit map) is pinned to the exact layer."""
+    params, packed = _bcnn_model(model_seed)
+    x = jnp.asarray(np.random.default_rng(input_seed)
+                    .random((batch, 32, 32, 3)).astype(np.float32))
+    h = x
+    a = bconv.fpconv_apply(params.conv1, x)                     # oracle, ±1
+    for idx in range(bcnn.N_LAYERS):
+        h = bcnn.apply_packed_layer(packed, idx, h, path="xla")
+        if idx >= 1 and idx <= 5:
+            a = bconv.apply_train(params.convs[idx - 1], a,
+                                  maxpool=bcnn.CONV_SPECS[idx][2])
+        elif idx == 6:
+            a = blinear.apply_train(params.fcs[0],
+                                    a.reshape(a.shape[0], -1))
+        elif idx == 7:
+            a = blinear.apply_train(params.fcs[1], a)
+        elif idx == 8:
+            a = blinear.apply_train(params.fcs[2], a, binarize_out=False)
+        if idx <= 5:            # {0,1} bit feature maps: exact
+            np.testing.assert_array_equal(
+                np.asarray(h), np.asarray(bitpack.encode_pm1(a)),
+                err_msg=f"layer {idx}")
+        elif idx <= 7:          # packed FC words: exact
+            want = bitpack.pack_bits(bitpack.encode_pm1(a))
+            np.testing.assert_array_equal(np.asarray(h), np.asarray(want),
+                                          err_msg=f"layer {idx}")
+        else:                   # FC-3 Norm logits: fp to BN tolerance
+            np.testing.assert_allclose(np.asarray(h), np.asarray(a),
+                                       rtol=1e-4, atol=1e-4)
 
 
 # ---------------------------------------------------------------- normbinarize

@@ -45,6 +45,7 @@ DEFAULT_FILES = [
     "src/repro/serve/bcnn_engine.py",
     "src/repro/parallel/pipeline.py",
     "src/repro/parallel/bcnn_pipeline.py",
+    "src/repro/parallel/bcnn_data_parallel.py",
     "benchmarks/fig7.py",
 ]
 
