@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import sys
 import time
 
@@ -222,8 +223,10 @@ def run_online(verbose: bool = True, **kw) -> dict:
         print(f"  capacity at full occupancy: {res['capacity_hz']:.1f} "
               f"img/s; Poisson load sweep ({res['n_requests']} req each):")
         for i in range(len(load["offered_hz"])):
+            ach = load["achieved_hz"][i]   # None: span too short to estimate
             print(f"    offered {load['offered_hz'][i]:6.1f} req/s → "
-                  f"achieved {load['achieved_hz'][i]:6.1f} img/s   "
+                  f"achieved "
+                  f"{f'{ach:6.1f}' if ach is not None else '   n/a'} img/s  "
                   f"p50 {load['p50_ms'][i]:7.1f} ms  "
                   f"p95 {load['p95_ms'][i]:7.1f} ms  "
                   f"p99 {load['p99_ms'][i]:7.1f} ms")
@@ -456,14 +459,23 @@ def run(verbose: bool = True, measure: bool = True) -> dict:
 
 
 def _jsonable(x):
+    """Recursively convert to JSON-ready values. Non-finite floats are
+    REJECTED, not passed through: ``json.dump`` would otherwise emit bare
+    ``Infinity``/``NaN`` — invalid JSON that breaks downstream parsers of
+    the CI artifact (a measurement that cannot produce a number must say
+    ``None``, e.g. ``serve/slots.py::latency_stats``'s throughput)."""
     if isinstance(x, dict):
         return {k: _jsonable(v) for k, v in x.items()}
     if isinstance(x, (list, tuple)):
         return [_jsonable(v) for v in x]
     if isinstance(x, np.ndarray):
-        return x.tolist()
+        return _jsonable(x.tolist())
     if isinstance(x, np.generic):
-        return x.item()
+        return _jsonable(x.item())
+    if isinstance(x, float) and not math.isfinite(x):
+        raise ValueError(
+            f"non-finite float {x!r} in benchmark results: not valid JSON "
+            f"(use None for undefined measurements)")
     return x
 
 

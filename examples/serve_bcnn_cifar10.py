@@ -67,8 +67,10 @@ def main(argv=None):
                         ("heavy load (0.9× capacity)", 0.9)):
         d = drive_poisson(eng, x, rate_hz=frac * cap, seed=args.seed + 1)
         st = d["stats"]
+        hz = (f"{st['throughput']:.1f}" if st["throughput"] is not None
+              else "n/a")                 # None: span too short to estimate
         print(f"{label}: offered {d['offered_hz']:.1f} req/s → achieved "
-              f"{st['throughput']:.1f} img/s")
+              f"{hz} img/s")
         print(f"  latency p50 {st['p50']*1e3:7.1f} ms   "
               f"p95 {st['p95']*1e3:7.1f} ms   p99 {st['p99']*1e3:7.1f} ms   "
               f"queue-wait p50 {st['queue_p50']*1e3:.1f} ms")

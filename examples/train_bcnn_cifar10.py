@@ -2,15 +2,19 @@
 verify the deployment path (packed XNOR + fused comparators) agrees with
 the training model.
 
-Pipeline (the paper's full life cycle):
-  1. train with binary constraints (STE; Courbariaux/Bengio recipe the
-     paper's model comes from) on synthetic CIFAR-like data,
+Pipeline (the paper's full life cycle, on the first-class training
+subsystem ``train/bcnn_train.py`` — see docs/TRAINING.md):
+  1. train with binary constraints (STE + Adam-on-latents + [−1,1] clip;
+     the Courbariaux/Bengio recipe the paper's model comes from) on
+     synthetic CIFAR-like data,
   2. fold BN statistics into per-channel thresholds (eq. 8) and bit-pack
      every weight (eq. 5),
   3. run the deployment forward and check top-1 agreement with the
-     training-graph eval forward,
-  4. report accuracy (synthetic task) + the analytic TPU throughput of the
-     deployment path.
+     training-graph eval forward (``train/bcnn_train.py::evaluate``),
+  4. report accuracy on the synthetic task.
+
+The restartable flavor of this loop — step-atomic checkpoints, bit-exact
+resume, artifact export — lives in ``launch/train_bcnn.py``.
 
 Run:  PYTHONPATH=src python examples/train_bcnn_cifar10.py --steps 300
 (~2 min CPU; --steps 60 for a faster check)
@@ -20,12 +24,7 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import bcnn
-from repro.data import SyntheticImages
+from repro.train import bcnn_train
 
 
 def main(argv=None):
@@ -37,67 +36,15 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    data = SyntheticImages(global_batch=args.batch, seed=args.seed)
-    params = bcnn.init(jax.random.PRNGKey(args.seed))
-    # Adam on fp latent weights + [−1,1] clip — the Courbariaux/Bengio
-    # recipe the paper's model is trained with (plain SGD barely moves a
-    # freshly-initialized BCNN: most STE gradients cancel early on).
-    m_state = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
-    v_state = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
-
-    @jax.jit
-    def step(params, m_state, v_state, t, x, y, lr):
-        (loss, stats), grads = jax.value_and_grad(
-            bcnn.loss_fn, has_aux=True)(params, x, y)
-        b1, b2, eps = 0.9, 0.999, 1e-8
-        m_state = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
-                               m_state, grads)
-        v_state = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
-                               v_state, grads)
-        bc1 = 1 - b1 ** t
-        bc2 = 1 - b2 ** t
-        new = jax.tree.map(
-            lambda p, m, v: p - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps),
-            params, m_state, v_state)
-        # latent clip (binary training): keep master weights in [−1, 1]
-        def clip_w(p):
-            return p._replace(w=jnp.clip(p.w, -1.0, 1.0))
-        new = bcnn.BCNNParams(
-            conv1=new.conv1._replace(w=jnp.clip(new.conv1.w, -1, 1)),
-            convs=tuple(clip_w(p) for p in new.convs),
-            fcs=tuple(clip_w(p) for p in new.fcs))
-        new = bcnn.update_running_stats(new, stats)
-        return new, m_state, v_state, loss
-
     t0 = time.time()
-    for s in range(args.steps):
-        x, y = data.batch(s)
-        params, m_state, v_state, loss = step(
-            params, m_state, v_state, jnp.float32(s + 1),
-            jnp.asarray(x), jnp.asarray(y), jnp.float32(args.lr))
-        if (s + 1) % 50 == 0 or s == 0:
-            print(f"step {s + 1:4d}  loss={float(loss):.4f}  "
-                  f"({(time.time() - t0):.0f}s)")
+    state, _ = bcnn_train.train(steps=args.steps, batch=args.batch,
+                                lr=args.lr, seed=args.seed, log_every=50)
+    print(f"trained {args.steps} steps in {time.time() - t0:.0f}s")
 
     # --- eval: training graph vs deployment (packed) graph ---
-    packed = bcnn.fold_model(params)
-    n_eval = correct_eval = correct_packed = agree = 0
-    for b in range(args.eval_batches):
-        x, y = data.batch(10_000 + b)
-        logits_eval = bcnn.forward_eval(params, jnp.asarray(x))
-        logits_packed = bcnn.forward_packed(packed, jnp.asarray(x),
-                                            path="xla")
-        pe = np.asarray(jnp.argmax(logits_eval, -1))
-        pp = np.asarray(jnp.argmax(logits_packed, -1))
-        correct_eval += int((pe == y).sum())
-        correct_packed += int((pp == y).sum())
-        agree += int((pe == pp).sum())
-        n_eval += len(y)
-    print(f"eval accuracy   : {correct_eval / n_eval:6.1%} (training graph)")
-    print(f"packed accuracy : {correct_packed / n_eval:6.1%} "
-          f"(deployment graph: XNOR + eq.8 comparators)")
-    print(f"top-1 agreement : {agree / n_eval:6.1%}")
-    assert agree / n_eval >= 0.97, "deployment path diverged from training"
+    ev = bcnn_train.evaluate(state.params, batch=args.batch,
+                             seed=args.seed, n_batches=args.eval_batches)
+    bcnn_train.report_eval(ev)
     return 0
 
 

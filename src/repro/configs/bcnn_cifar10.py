@@ -21,6 +21,15 @@ N_CLASSES = 10
 # All BCNN conv layers have 32-aligned channels, so "auto" → direct.
 from repro.core.bconv import DEFAULT_CONV_STRATEGY as CONV_STRATEGY  # noqa: E402,F401
 
+# Training defaults (train/bcnn_train.py, launch/train_bcnn.py): the
+# Courbariaux/Bengio recipe's CPU-scale operating point — ~2 min wall for
+# the full 300 steps, --steps 60 for a fast check — and the step-atomic
+# checkpoint cadence of the restartable loop.
+TRAIN_STEPS = 300
+TRAIN_BATCH = 64
+TRAIN_LR = 2e-3
+TRAIN_CKPT_EVERY = 50
+
 # Paper Fig. 7 benchmark batch sizes (FPGA vs GPU sweep)
 FIG7_BATCH_SIZES = (16, 32, 64, 128, 256, 512)
 

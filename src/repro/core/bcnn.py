@@ -64,17 +64,27 @@ def init(key) -> BCNNParams:
 # ---------------------------------------------------------------------------
 
 def _bn_train(y, gamma, beta, axes):
+    """Batch-stat BN: normalize with the biased batch variance (standard
+    training semantics), but report the *unbiased* (Bessel-corrected)
+    variance for the running-stat side channel — inference BN (and the
+    eq. 8 threshold fold consuming ``bn_var``) expects the population
+    estimate, not the biased batch moment."""
     mean = jnp.mean(y, axis=axes)
     var = jnp.var(y, axis=axes)
     z = (y - mean) / jnp.sqrt(var + BN_EPS) * gamma + beta
-    return z, mean, var
+    n = 1
+    for a in axes:
+        n *= y.shape[a]
+    var_u = var * (n / (n - 1)) if n > 1 else var
+    return z, mean, var_u
 
 
 def forward_train(params: BCNNParams, x01: jnp.ndarray):
     """x01: (N,32,32,3) in [0,1]. Returns (logits, batch_stats).
 
-    batch_stats is a list of (mean, var) per normalized layer, in layer order,
-    for the trainer's running-average update (BN_MOMENTUM).
+    batch_stats is a list of (mean, var) per normalized layer, in layer
+    order, for the trainer's running-average update (BN_MOMENTUM); ``var``
+    is the unbiased estimate (see ``_bn_train``).
     """
     stats = []
     # CONV-1 (fp path, eq. 7)
@@ -231,22 +241,125 @@ def forward_packed(packed: BCNNPacked, x01: jnp.ndarray,
     return h
 
 
-def make_packed_forward(packed: BCNNPacked, *, path: str = "mxu",
-                        conv_strategy: str | None = None):
-    """Close the packed artifacts over ``forward_packed`` → a jit-friendly fn.
+# ---------------------------------------------------------------------------
+# Weight hot-swap plumbing: arrays ride as jit ARGUMENTS, statics stay closed
+# ---------------------------------------------------------------------------
 
-    ``forward_packed`` cannot be jit'd with ``packed`` as an argument: the
-    packed NamedTuples carry static Python ints (k, filter sizes) that jit
-    would trace into abstract values, breaking the kernels'
-    ``static_argnames``. Closing over them instead keeps the ints static and
-    gives the returned function a shape-only jit signature — ``jax.jit``
-    of it compiles exactly once per input shape, which is the zero-recompile
-    contract the streaming engine (``serve/bcnn_engine.py``) relies on.
+def _is_weight_array(x) -> bool:
+    """Array-like packed leaf (vs the static Python ints/floats/None the
+    packed NamedTuples also carry: k, fh/fw, fc3_k, BN eps)."""
+    return hasattr(x, "shape") and hasattr(x, "dtype")
+
+
+def split_packed(packed: BCNNPacked):
+    """Split a packed net into (array leaves, rebuild closure).
+
+    ``forward_packed`` cannot be jit'd with ``packed`` as one argument: the
+    packed NamedTuples mix arrays with static Python ints (k, filter sizes)
+    that jit would trace into abstract values, breaking the kernels'
+    ``static_argnames``. This split is the hot-swap contract: the *arrays*
+    ride as a flat tuple of jit arguments (so two packed nets with
+    identical shapes/dtypes hit the same compiled executable — zero
+    recompiles on ``BCNNEngine.swap_packed``), while ``rebuild(arrays)``
+    re-threads them through the static skeleton inside the trace.
     """
-    def fwd(x01: jnp.ndarray) -> jnp.ndarray:
-        return forward_packed(packed, x01, path=path,
-                              conv_strategy=conv_strategy)
-    return fwd
+    leaves, treedef = jax.tree_util.tree_flatten(
+        packed, is_leaf=lambda x: x is None)
+    mask = tuple(_is_weight_array(l) for l in leaves)
+    arrays = tuple(l for l, m in zip(leaves, mask) if m)
+    statics = tuple(None if m else l for l, m in zip(leaves, mask))
+
+    def rebuild(arrs) -> BCNNPacked:
+        it = iter(arrs)
+        return jax.tree_util.tree_unflatten(
+            treedef, [next(it) if m else s for m, s in zip(mask, statics)])
+
+    return arrays, rebuild
+
+
+def assert_swap_compatible(old: BCNNPacked, new: BCNNPacked) -> tuple:
+    """Validate that ``new`` can hot-swap into a forward built from ``old``
+    with ZERO recompiles: identical tree structure, identical statics
+    (k/fh/fw/eps), identical array shapes and dtypes. Returns the new
+    array-leaf tuple (``split_packed`` order) on success; raises
+    ValueError with the first mismatch otherwise."""
+    lo, to = jax.tree_util.tree_flatten(old, is_leaf=lambda x: x is None)
+    ln, tn = jax.tree_util.tree_flatten(new, is_leaf=lambda x: x is None)
+    if to != tn:
+        raise ValueError(f"packed tree structure differs: {to} != {tn}")
+    for i, (a, b) in enumerate(zip(lo, ln)):
+        if _is_weight_array(a) != _is_weight_array(b):
+            raise ValueError(f"leaf {i}: array/static kind mismatch "
+                             f"({type(a).__name__} vs {type(b).__name__})")
+        if _is_weight_array(a):
+            if tuple(a.shape) != tuple(b.shape) or a.dtype != b.dtype:
+                raise ValueError(
+                    f"leaf {i}: shape/dtype mismatch {a.shape}/{a.dtype} vs "
+                    f"{b.shape}/{b.dtype} — a swap must come from the same "
+                    f"architecture (fold_model of identically-shaped params)")
+        elif a != b:
+            raise ValueError(f"leaf {i}: static mismatch {a!r} != {b!r} "
+                             f"(k/filter-size/eps must be identical)")
+    return tuple(l for l in ln if _is_weight_array(l))
+
+
+class PackedForward:
+    """Self-jitting, hot-swappable single-device packed forward.
+
+    Callable ``(N, H, W, C) float32 → (N, n_classes) float32`` with a
+    shape-only jit signature: the weight arrays are passed as jit
+    *arguments* (statics closed over via ``split_packed``), so
+
+    * the jit compiles exactly once per input shape (``cache_size()`` — the
+      zero-recompile contract ``serve/bcnn_engine.py`` relies on), and
+    * ``swap(new_packed)`` replaces the weights under live traffic with no
+      recompilation at all: identical shapes/dtypes → same executable.
+    """
+
+    def __init__(self, packed: BCNNPacked, *, path: str = "mxu",
+                 conv_strategy: str | None = None):
+        self._packed = packed
+        arrays, rebuild = split_packed(packed)
+        self._arrays = arrays
+
+        def fwd(arrs, x01: jnp.ndarray) -> jnp.ndarray:
+            return forward_packed(rebuild(arrs), x01, path=path,
+                                  conv_strategy=conv_strategy)
+
+        self._jit = jax.jit(fwd)
+
+    @property
+    def packed(self) -> BCNNPacked:
+        """The packed net currently being served."""
+        return self._packed
+
+    def __call__(self, x01: jnp.ndarray) -> jnp.ndarray:
+        return self._jit(self._arrays, x01)
+
+    def swap(self, new_packed: BCNNPacked) -> None:
+        """Replace the served weights; zero recompiles (shapes must match,
+        checked by ``assert_swap_compatible``)."""
+        self._arrays = assert_swap_compatible(self._packed, new_packed)
+        self._packed = new_packed
+
+    def cache_size(self) -> int:
+        """Distinct compilations of the jit'd forward (1 per input shape,
+        unchanged by any number of ``swap``s)."""
+        return int(self._jit._cache_size())
+
+
+def make_packed_forward(packed: BCNNPacked, *, path: str = "mxu",
+                        conv_strategy: str | None = None) -> PackedForward:
+    """Close the packed statics over ``forward_packed`` → a ``PackedForward``.
+
+    The returned object is a plain ``x01 → logits`` callable with a
+    shape-only jit signature — it compiles exactly once per input shape,
+    which is the zero-recompile contract the streaming engine
+    (``serve/bcnn_engine.py``) relies on — and additionally supports
+    ``swap(new_packed)``: zero-recompile weight hot-swap (see
+    ``PackedForward``).
+    """
+    return PackedForward(packed, path=path, conv_strategy=conv_strategy)
 
 
 def loss_fn(params: BCNNParams, x01: jnp.ndarray, labels: jnp.ndarray):

@@ -35,7 +35,8 @@ import jax.numpy as jnp
 
 from repro.core import bitpack
 from repro.core.binarize import binarize_ste, quantize_input_6bit, quantize_weight_2bit
-from repro.core.normbinarize import BNParams, NBThreshold, fold_threshold
+from repro.core.normbinarize import (BNParams, NBThreshold, bn_affine_exact,
+                                     bn_denom, fold_threshold)
 from repro.kernels import ops
 
 
@@ -226,5 +227,9 @@ def fpconv_apply(p: FpConvParams, x01: jnp.ndarray, *,
         a0, jnp.transpose(w2, (1, 2, 3, 0)),
         window_strides=(1, 1), padding="SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    z = (y - p.bn_mean) / jnp.sqrt(p.bn_var + 1e-4) * p.bn_gamma + p.bn_beta
+    # bn_denom/bn_affine_exact: this BN runs inside the deployment jit with
+    # hot-swappable (runtime-argument) stats — rounding must match the
+    # eager oracle or a 1-ulp wobble at z == 0 flips the binarized bit
+    z = bn_affine_exact((y - p.bn_mean) / bn_denom(p.bn_var, 1e-4),
+                        p.bn_gamma, p.bn_beta)
     return binarize_ste(z) if binarize_out else z

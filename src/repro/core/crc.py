@@ -1,0 +1,18 @@
+"""Shared array-integrity hash for the on-disk formats.
+
+Both persistence layers — training checkpoints (``train/checkpoint.py``)
+and deployment artifacts (``core/bcnn_artifact.py``) — stamp every stored
+array with this CRC32 and verify it before any data reaches the optimizer
+or the serving engine. One definition keeps the two formats hashing
+identically by construction.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+
+def crc32_array(arr: np.ndarray) -> int:
+    """CRC32 over the raw contiguous bytes of ``arr``."""
+    return zlib.crc32(np.ascontiguousarray(arr).view(np.uint8).reshape(-1))

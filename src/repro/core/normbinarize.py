@@ -23,6 +23,7 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 
@@ -55,6 +56,31 @@ def fold_threshold(bn: BNParams, cnum: int, rounded: bool = True) -> NBThreshold
     return NBThreshold(c=c, flip=bn.gamma < 0)
 
 
+def bn_denom(var: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """``sqrt(var + eps)`` behind an optimization barrier.
+
+    Part of the deployment path's bit-exactness contract (jit'd engine
+    forward ≡ eager ``core/bcnn.py::forward_packed``, asserted by the
+    serving tests and benchmark harnesses): the BN arithmetic must round
+    identically in and out of jit, for ANY weights — whether they ride as
+    constants (closure) or runtime arguments (the
+    ``core/bcnn.py::split_packed`` hot-swap path). XLA otherwise rewrites
+    ``x / sqrt(v)`` into ``x * rsqrt(v)`` / a division by a constant into
+    a reciprocal multiply — 1-ulp differences the eager reference never
+    sees. The barrier makes the divisor opaque, pinning the division as
+    written. ``bn_affine_exact`` handles the multiply-add half.
+    """
+    return jax.lax.optimization_barrier(jnp.sqrt(var + eps))
+
+
+def bn_affine_exact(normalized: jnp.ndarray, gamma: jnp.ndarray,
+                    beta: jnp.ndarray) -> jnp.ndarray:
+    """``normalized * gamma + beta`` with the multiply barriered so jit
+    cannot contract it into an FMA — the other 1-ulp divergence between
+    the fused and eager computations (see ``bn_denom``)."""
+    return jax.lax.optimization_barrier(normalized * gamma) + beta
+
+
 def norm_binarize(y_l: jnp.ndarray, thr: NBThreshold) -> jnp.ndarray:
     """Paper eq. (8): the fused comparator. Returns {0,1} bits (int8)."""
     ge = y_l >= thr.c
@@ -64,7 +90,8 @@ def norm_binarize(y_l: jnp.ndarray, thr: NBThreshold) -> jnp.ndarray:
 
 def batchnorm_inference(y_lo: jnp.ndarray, bn: BNParams) -> jnp.ndarray:
     """Reference eq. (2) batch norm on the ±1-domain pre-activation (oracle)."""
-    return (y_lo - bn.mean) / jnp.sqrt(bn.var + bn.eps) * bn.gamma + bn.beta
+    return bn_affine_exact((y_lo - bn.mean) / bn_denom(bn.var, bn.eps),
+                           bn.gamma, bn.beta)
 
 
 def norm_only(y_l: jnp.ndarray, bn: BNParams, cnum: int) -> jnp.ndarray:

@@ -1,11 +1,12 @@
 """Streaming BCNN serving driver — the paper's online individual-request
 scenario (§6.3, Fig. 7) as a runnable service loop.
 
-Builds the paper's 9-layer CIFAR-10 BCNN (random or briefly-trained
-weights — serving behavior is weight-independent), folds it to the packed
-deployment form (eq. 5/8), and serves synthetic CIFAR-like images through
-the continuously-stepped slot engine (``serve/bcnn_engine.py``). Reports
-per-request latency percentiles and achieved throughput.
+Builds the paper's 9-layer CIFAR-10 BCNN — random weights folded on the
+spot, or TRAINED weights loaded from a deployment artifact
+(``--artifact``, written by ``launch/train_bcnn.py --export-artifact``
+via ``core/bcnn_artifact.py``) — and serves synthetic CIFAR-like images
+through the continuously-stepped slot engine (``serve/bcnn_engine.py``).
+Reports per-request latency percentiles and achieved throughput.
 
 Usage (CPU-scale):
     PYTHONPATH=src python -m repro.launch.serve_bcnn --requests 32
@@ -19,6 +20,10 @@ Usage (CPU-scale):
         # the paper's large-batch scenario: one bulk batch through the
         # batch-sharded data-parallel forward
         # (parallel/bcnn_data_parallel.py; see docs/SERVING.md)
+    PYTHONPATH=src python -m repro.launch.serve_bcnn \
+        --artifact /tmp/bcnn_art
+        # serve trained weights from a deployment artifact
+        # (docs/TRAINING.md walks the full train → export → serve cycle)
 """
 from __future__ import annotations
 
@@ -42,6 +47,11 @@ from repro.serve import BCNNEngine, drive_poisson
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--artifact", default="", metavar="DIR",
+                    help="serve TRAINED weights from a deployment artifact "
+                         "(core/bcnn_artifact.py, exported by "
+                         "launch/train_bcnn.py --export-artifact) instead "
+                         "of randomly initialized ones")
     ap.add_argument("--slots", type=int, default=pc.SERVE_N_SLOTS)
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--rate", type=float, default=0.0,
@@ -73,8 +83,16 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    params = bcnn.init(jax.random.PRNGKey(args.seed))
-    packed = bcnn.fold_model(params)
+    if args.artifact:
+        from repro.core import bcnn_artifact
+        packed = bcnn_artifact.load_packed(args.artifact)
+        prov = bcnn_artifact.load_manifest(args.artifact)["provenance"]
+        print(f"serving artifact {args.artifact} "
+              f"(trained {prov.get('steps', '?')} steps, "
+              f"seed {prov.get('seed', '?')})")
+    else:
+        params = bcnn.init(jax.random.PRNGKey(args.seed))
+        packed = bcnn.fold_model(params)
     eng = BCNNEngine.from_packed(packed, n_slots=args.slots, path=args.path,
                                  conv_strategy=args.conv_strategy,
                                  pipeline_stages=args.pipeline_stages,
@@ -128,8 +146,11 @@ def main(argv=None):
         print(f"batch-of-{args.requests} submitted up front "
               f"({dt:.2f}s wall):")
     assert len(out) == args.requests, "engine dropped requests"
+    # throughput is None when the wall span was too short to estimate
+    hz = (f"{st['throughput']:.1f}" if st["throughput"] is not None
+          else "n/a")
     print(f"  served {st['n']}/{args.requests} requests, "
-          f"{st['throughput']:.1f} img/s over {eng.steps_executed} steps "
+          f"{hz} img/s over {eng.steps_executed} steps "
           f"({args.slots} slots, step compiled {eng.step_cache_size}×)")
     print(f"  latency  p50 {st['p50']*1e3:7.1f} ms   "
           f"p95 {st['p95']*1e3:7.1f} ms   p99 {st['p99']*1e3:7.1f} ms")

@@ -49,6 +49,8 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import PartitionSpec as P
+
 from repro.core import bcnn
 from repro.launch.mesh import dp_axes, make_data_mesh
 from repro.parallel import sharding
@@ -126,15 +128,24 @@ class ShardedForward:
         if devices is None:
             devices = list(mesh.devices.flat)
         self.devices = tuple(devices)
+        self._packed = packed
         if n_stages == 1:
             # pure data parallelism: ONE shard_map'd jit of the whole
             # packed forward; the batch spec comes from the same helper
-            # the LM input pipeline uses (P over the mesh's DP axes)
+            # the LM input pipeline uses (P over the mesh's DP axes). The
+            # weight arrays ride as a replicated (P()) argument rather than
+            # closed-over constants — the core/bcnn.py::split_packed
+            # hot-swap contract: swap() re-binds them with zero recompiles.
             spec = sharding.batch_spec(mesh, self.plan.chunk)
-            fwd = bcnn.make_packed_forward(packed, path=path,
+            arrays, rebuild = bcnn.split_packed(packed)
+            self._arrays = self._replicate(arrays)
+
+            def fwd(arrs, x01):
+                return bcnn.forward_packed(rebuild(arrs), x01, path=path,
                                            conv_strategy=conv_strategy)
+
             self._chunk_fn = jax.jit(_shard_map(
-                fwd, mesh=mesh, in_specs=(spec,), out_specs=spec))
+                fwd, mesh=mesh, in_specs=(P(), spec), out_specs=spec))
             self._columns = None
         else:
             # 2-D plan: shard column s pipelines the 9 layers over its own
@@ -153,6 +164,11 @@ class ShardedForward:
     def data_shards(self) -> int:
         return self.plan.data_shards
 
+    @property
+    def packed(self) -> bcnn.BCNNPacked:
+        """The packed net currently being served (all shards/columns)."""
+        return self._packed
+
     def __call__(self, x01: jnp.ndarray) -> jnp.ndarray:
         n = x01.shape[0]
         if n == 0:          # drop-in contract: empty batch → empty logits
@@ -164,7 +180,7 @@ class ShardedForward:
         for c in range(n_chunks):
             xc = x[c * chunk:(c + 1) * chunk]
             if self._columns is None:
-                outs.append(self._chunk_fn(xc))
+                outs.append(self._chunk_fn(self._arrays, xc))
             else:
                 mb = self.plan.micro_batch
                 # host-side split; every column call dispatches async, so
@@ -178,11 +194,31 @@ class ShardedForward:
         logits = jnp.concatenate(outs) if len(outs) > 1 else outs[0]
         return logits[:n]
 
+    def _replicate(self, arrays) -> tuple:
+        """Replicate the weight arrays onto the whole mesh once (they ride
+        as jit arguments now, not baked-in constants — without this every
+        chunk call would re-transfer ~1.7 MB of words per device)."""
+        from jax.sharding import NamedSharding
+        return jax.device_put(arrays, NamedSharding(self.mesh, P()))
+
     # ------------------------------------------------------------ contracts
+    def swap(self, new_packed: bcnn.BCNNPacked) -> None:
+        """Hot-swap the served weights (every shard / shard-column); zero
+        recompiles — identical shapes reuse the compiled chunk unit
+        (checked by ``core/bcnn.py::assert_swap_compatible``)."""
+        if self._columns is None:
+            self._arrays = self._replicate(
+                bcnn.assert_swap_compatible(self._packed, new_packed))
+        else:
+            for col in self._columns:
+                col.swap(new_packed)
+        self._packed = new_packed
+
     def cache_size(self) -> int:
         """Compilations of the jit'd chunk unit (max across shard-column
         stages for the 2-D plan). The contract is exactly 1 per
-        (shards, stages, micro_batch) plan, for every batch size."""
+        (shards, stages, micro_batch) plan, for every batch size and
+        across any number of ``swap``s."""
         if self._columns is None:
             return int(self._chunk_fn._cache_size())
         return max(col.cache_size() for col in self._columns)

@@ -169,15 +169,19 @@ def pad_rows(x: jnp.ndarray, n_rows: int) -> jnp.ndarray:
         [x, jnp.zeros((n_rows - x.shape[0], *x.shape[1:]), x.dtype)])
 
 
-def _make_stage_fn(packed: bcnn.BCNNPacked, a: int, b: int, *, path: str,
+def _make_stage_fn(rebuild: Callable, a: int, b: int, *, path: str,
                    conv_strategy: str | None) -> Callable:
     """Closure applying layers [a, b): unpack → layers → pack, jit-ready.
 
-    Statics (layer indices, packed k's, filter sizes) are closed over, so
-    the returned function has a shape-only jit signature — the same
-    contract as ``core/bcnn.py::make_packed_forward``, per stage.
+    Statics (layer indices, packed k's, filter sizes) are closed over while
+    the weight arrays arrive as the first jit argument (the
+    ``core/bcnn.py::split_packed`` hot-swap contract), so the returned
+    function has a shape-only jit signature — the same contract as
+    ``core/bcnn.py::make_packed_forward``, per stage — and a weight swap
+    with identical shapes reuses the compiled executable.
     """
-    def stage(h: jnp.ndarray) -> jnp.ndarray:
+    def stage(arrays, h: jnp.ndarray) -> jnp.ndarray:
+        packed = rebuild(arrays)
         h = unpack_boundary(a, h)
         for idx in range(a, b):
             h = bcnn.apply_packed_layer(packed, idx, h, path=path,
@@ -214,20 +218,35 @@ class PipelinedForward:
             raise ValueError(f"micro_batch must be >= 1, got {micro_batch}")
         self.plan = plan
         self.micro_batch = micro_batch
+        self._packed = packed
         self._n_classes = packed.fc3_w_words.shape[0]
         # stage s runs on devices[s % len(devices)]: fewer devices than
         # stages degrades gracefully (stages co-resident, still correct)
         self.devices = tuple(devices[s % len(devices)]
                              for s in range(plan.n_stages))
+        arrays, rebuild = bcnn.split_packed(packed)
+        self._stage_arrays = self._place_arrays(arrays)
         self._stage_fns = [
-            jax.jit(_make_stage_fn(packed, plan.bounds[s],
+            jax.jit(_make_stage_fn(rebuild, plan.bounds[s],
                                    plan.bounds[s + 1], path=path,
                                    conv_strategy=conv_strategy))
             for s in range(plan.n_stages)]
 
+    def _place_arrays(self, arrays) -> list:
+        """One device-resident copy of the weight arrays per stage (the
+        whole packed net is ~1.7 MB — replication beats a per-call host
+        transfer). Mixed-device jit arguments would be rejected, so each
+        stage call pairs its committed weights with its committed input."""
+        return [jax.device_put(arrays, d) for d in self.devices]
+
     @property
     def n_stages(self) -> int:
         return self.plan.n_stages
+
+    @property
+    def packed(self) -> bcnn.BCNNPacked:
+        """The packed net currently being served (all stages)."""
+        return self._packed
 
     def __call__(self, x01: jnp.ndarray) -> jnp.ndarray:
         n = x01.shape[0]
@@ -251,6 +270,7 @@ class PipelinedForward:
                 if 0 <= m < n_micro:
                     h = x[m * mb:(m + 1) * mb] if s == 0 else bufs[s - 1]
                     nxt[s] = self._stage_fns[s](
+                        self._stage_arrays[s],
                         jax.device_put(h, self.devices[s]))
             if nxt[-1] is not None:
                 outs.append(nxt[-1])
@@ -259,10 +279,18 @@ class PipelinedForward:
         return logits[:n]
 
     # ------------------------------------------------------------ contracts
+    def swap(self, new_packed: bcnn.BCNNPacked) -> None:
+        """Hot-swap the served weights across every stage; zero recompiles
+        (identical shapes → each stage's jit executable is reused; checked
+        by ``core/bcnn.py::assert_swap_compatible``)."""
+        arrays = bcnn.assert_swap_compatible(self._packed, new_packed)
+        self._packed = new_packed
+        self._stage_arrays = self._place_arrays(arrays)
+
     def cache_size(self) -> int:
         """Max per-stage jit-cache size — the zero-recompile contract says
-        this stays 1 across every batch size and occupancy pattern (each
-        stage only ever sees the fixed micro-batch shapes)."""
+        this stays 1 across every batch size, occupancy pattern, and weight
+        swap (each stage only ever sees the fixed micro-batch shapes)."""
         return max(int(f._cache_size()) for f in self._stage_fns)
 
     def stage_times(self, x01: jnp.ndarray, reps: int = 3) -> list[float]:
@@ -273,10 +301,11 @@ class PipelinedForward:
         times = []
         for s, fn in enumerate(self._stage_fns):
             h = jax.device_put(h, self.devices[s])
-            jax.block_until_ready(fn(h))            # compile + warm
+            w = self._stage_arrays[s]
+            jax.block_until_ready(fn(w, h))         # compile + warm
             t0 = time.perf_counter()
             for _ in range(reps):
-                out = fn(h)
+                out = fn(w, h)
             jax.block_until_ready(out)
             times.append((time.perf_counter() - t0) / reps)
             h = out

@@ -35,6 +35,13 @@ data-parallel forward (``parallel/bcnn_data_parallel.py``), and a bulk
 batch at or above ``batch_threshold`` bypasses the slots entirely while
 smaller ones stream through them unchanged.
 
+Trained weights come from the artifact lifecycle
+(``launch/train_bcnn.py`` → ``core/bcnn_artifact.py`` →
+``launch/serve_bcnn.py --artifact``; see ``docs/TRAINING.md``) and can be
+replaced under live traffic with ``BCNNEngine.swap_packed`` — a
+zero-recompile weight hot-swap on all three forward variants (plain,
+stage-pipelined, data-parallel).
+
 Entry points: ``launch/serve_bcnn.py`` (CLI service loop),
 ``examples/serve_bcnn_cifar10.py`` (Poisson arrival demo).
 """
@@ -178,6 +185,12 @@ class BCNNEngine:
         forward, complete every occupied slot. Returns {rid: logits}."""
         for i, req in self.sched.admit():
             self._x[i] = req.payload
+        return self._flush()
+
+    def _flush(self) -> dict[int, np.ndarray]:
+        """Run the forward over the slot buffer and complete every occupied
+        slot (no admission — ``swap_packed`` uses this to drain in-flight
+        requests on the pre-swap weights)."""
         if self.sched.n_occupied == 0:
             return {}
         logits = np.asarray(
@@ -188,6 +201,44 @@ class BCNNEngine:
             self.sched.complete(i)
             results[req.rid] = logits[i]
         return results
+
+    def swap_packed(self, new_packed: bcnn.BCNNPacked
+                    ) -> dict[int, np.ndarray]:
+        """Hot-swap the served weights under live traffic, zero recompiles.
+
+        The swap contract (tests/test_bcnn_swap.py):
+
+        * the replacement must be shape/static-identical to the current
+          packed net (``core/bcnn.py::assert_swap_compatible``) — so every
+          jit'd unit (slot step, pipeline stages, data-parallel chunk) hits
+          its existing executable: ``step_cache_size``/``batch_cache_size``
+          stay exactly where they were;
+        * slots occupied at swap time are drained first — their logits are
+          computed with the PRE-swap weights and returned to the caller
+          ({} in the usual case: slots only stay occupied inside ``step``);
+        * queued (not yet admitted) requests are untouched and will be
+          served with the new weights.
+
+        Only engines whose forward supports ``swap`` qualify — i.e. any
+        ``from_packed`` engine (plain, pipelined, or data-parallel);
+        an opaque user ``forward_fn`` raises TypeError.
+        """
+        if not hasattr(self._step_fn, "swap"):
+            raise TypeError(
+                "this engine's forward does not support weight hot-swap; "
+                "build it with BCNNEngine.from_packed (core/bcnn.py::"
+                "PackedForward / the pipelined or data-parallel forwards)")
+        # validate BEFORE draining: a rejected swap must leave the engine
+        # untouched (and not silently discard the drained results)
+        bcnn.assert_swap_compatible(self._step_fn.packed, new_packed)
+        if self._batch_fn is not None:
+            bcnn.assert_swap_compatible(self._batch_fn.packed, new_packed)
+        drained = self._flush()         # pre-swap weights, consistently
+        self._step_fn.swap(new_packed)
+        if self._batch_fn is not None:
+            self._batch_fn.swap(new_packed)
+        self._n_classes = new_packed.fc3_w_words.shape[0]
+        return drained
 
     def run(self, max_steps: int = 100_000) -> dict[int, np.ndarray]:
         """Drive until every submitted request completes. {rid: logits}."""

@@ -155,7 +155,11 @@ def latency_stats(requests: Iterable[Request],
     Returns seconds-valued fields: ``p50``/``p95``/``p99`` (end-to-end
     latency percentiles), ``mean``/``max``, ``queue_p50`` (admission wait),
     and ``throughput`` = completed requests / wall span from first
-    submission to last completion. Empty input → ``{"n": 0}``.
+    submission to last completion. A zero-length span (e.g. a single
+    completed request: its submission IS the span's start and end to clock
+    resolution) carries no rate information, so ``throughput`` is ``None``
+    there — never ``inf``/``nan``, which are not JSON and broke the
+    ``benchmarks/fig7.py --json`` artifact. Empty input → ``{"n": 0}``.
     """
     reqs = [r for r in requests if r.done]
     if not reqs:
@@ -166,7 +170,7 @@ def latency_stats(requests: Iterable[Request],
     out = {"n": len(reqs),
            "mean": float(lat.mean()), "max": float(lat.max()),
            "queue_p50": float(np.percentile(wait, 50)),
-           "throughput": float(len(reqs) / span) if span > 0 else float("inf")}
+           "throughput": float(len(reqs) / span) if span > 0 else None}
     for p in percentiles:
         out[f"p{p}"] = float(np.percentile(lat, p))
     return out

@@ -32,6 +32,8 @@ import jax
 import ml_dtypes
 import numpy as np
 
+from repro.core.crc import crc32_array as _crc
+
 _STEP_RE = re.compile(r"^step_(\d{8})$")
 
 
@@ -67,13 +69,10 @@ def _flatten(tree) -> dict[str, Any]:
     return out
 
 
-def _crc(arr: np.ndarray) -> int:
-    return zlib.crc32(np.ascontiguousarray(arr).view(np.uint8).reshape(-1))
-
-
 def latest_step(ckpt_dir: str) -> int | None:
     if not os.path.isdir(ckpt_dir):
         return None
+    _recover_retired(ckpt_dir)
     steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
              if (m := _STEP_RE.match(f))]
     return max(steps) if steps else None
@@ -85,6 +84,38 @@ def _gc_tmp(ckpt_dir: str) -> None:
             shutil.rmtree(os.path.join(ckpt_dir, f), ignore_errors=True)
 
 
+_RETIRED_SUFFIX = ".retired"
+
+
+def _recover_retired(ckpt_dir: str) -> None:
+    """Resolve interrupted same-step re-saves (see ``save``).
+
+    A re-save retires the old committed copy to ``step_XXXXXXXX.retired``
+    before renaming the new one into place. A crash between the two
+    renames leaves only the retired copy — roll it back so the step is
+    never lost; if the commit DID land, the leftover retired copy is
+    deleted. ``.retired`` deliberately does not match ``.tmp`` (the GC
+    sweep) or ``_STEP_RE`` (a committed step), so an orphan can only be
+    resolved here, never collected as litter or mistaken for a commit.
+    """
+    for f in os.listdir(ckpt_dir):
+        if not f.endswith(_RETIRED_SUFFIX):
+            continue
+        retired = os.path.join(ckpt_dir, f)
+        final = os.path.join(ckpt_dir, f[:-len(_RETIRED_SUFFIX)])
+        if os.path.isdir(final):
+            shutil.rmtree(retired, ignore_errors=True)   # commit landed
+        else:
+            try:
+                os.replace(retired, final)               # roll back
+            except OSError:
+                # lost the rollback race to a concurrent process (this
+                # runs unguarded on the restore path) — fine as long as
+                # someone committed the step
+                if not os.path.isdir(final):
+                    raise
+
+
 def save(ckpt_dir: str, step: int, tree, *, keep: int = 3,
          process_index: int | None = None) -> str:
     """Write one step-atomic checkpoint; returns the committed directory."""
@@ -92,6 +123,7 @@ def save(ckpt_dir: str, step: int, tree, *, keep: int = 3,
     os.makedirs(ckpt_dir, exist_ok=True)
     if pidx == 0:
         _gc_tmp(ckpt_dir)
+        _recover_retired(ckpt_dir)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
     os.makedirs(tmp, exist_ok=True)
@@ -117,7 +149,34 @@ def save(ckpt_dir: str, step: int, tree, *, keep: int = 3,
         json.dump(manifest, f, indent=1)
         f.flush()
         os.fsync(f.fileno())
-    os.replace(tmp, final)          # atomic commit
+    # atomic commit. os.replace cannot replace a NON-EMPTY directory, so a
+    # re-save of an existing step (the crash-just-after-save restart path:
+    # resume from step N, checkpoint step N again) first retires the old
+    # copy to ``.retired`` — a name neither the ``.tmp`` GC sweep collects
+    # nor ``_STEP_RE`` matches. A crash between the two renames therefore
+    # loses nothing: ``_recover_retired`` (run by the next ``save`` /
+    # ``latest_step``) rolls the retired copy back into place, so step N
+    # always restores as either the complete old or the complete new
+    # checkpoint, never torn and never missing.
+    if os.path.isdir(final):
+        retired = final + _RETIRED_SUFFIX
+        shutil.rmtree(retired, ignore_errors=True)
+        os.replace(final, retired)
+        while True:
+            try:
+                os.replace(tmp, final)
+                break
+            except OSError:
+                # a concurrent reader's _recover_retired rolled the retired
+                # copy back into ``final`` between our two renames — retire
+                # it again and retry the commit
+                if not os.path.isdir(final):
+                    raise
+                shutil.rmtree(retired, ignore_errors=True)
+                os.replace(final, retired)
+        shutil.rmtree(retired, ignore_errors=True)
+    else:
+        os.replace(tmp, final)
 
     # retention (only after commit)
     steps = sorted(int(m.group(1)) for f in os.listdir(ckpt_dir)

@@ -59,6 +59,56 @@ def test_packed_paths_agree(trained, path):
                                rtol=1e-5, atol=1e-5)
 
 
+def test_bn_batch_stats_are_unbiased(trained):
+    """Fidelity regression: ``update_running_stats`` must fold the
+    *unbiased* (Bessel-corrected) batch variance into ``bn_var`` — the
+    estimate standard inference BN (and the eq. 8 threshold fold consuming
+    ``bn_var``) expects — not the biased moment ``_bn_train`` normalizes
+    with."""
+    from repro.core.binarize import (quantize_input_6bit,
+                                     quantize_weight_2bit)
+    params, x = trained
+    _, stats = bcnn.forward_train(params, x)
+    # replicate CONV-1's pre-activation exactly as forward_train computes it
+    p = params.conv1
+    y = jax.lax.conv_general_dilated(
+        quantize_input_6bit(x),
+        jnp.transpose(quantize_weight_2bit(p.w), (1, 2, 3, 0)), (1, 1),
+        "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    m, v = stats[0]
+    n = y.shape[0] * y.shape[1] * y.shape[2]
+    np.testing.assert_allclose(np.asarray(m),
+                               np.asarray(jnp.mean(y, axis=(0, 1, 2))),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(v),
+        np.asarray(jnp.var(y, axis=(0, 1, 2)) * (n / (n - 1))),
+        rtol=1e-4, atol=1e-4)
+    # and the running average folds exactly these values with BN_MOMENTUM
+    upd = bcnn.update_running_stats(params, stats)
+    np.testing.assert_allclose(
+        np.asarray(upd.conv1.bn_var),
+        np.asarray(bcnn.BN_MOMENTUM * params.conv1.bn_var
+                   + (1 - bcnn.BN_MOMENTUM) * v), rtol=1e-6)
+
+
+def test_train_eval_bn_parity_on_converged_stats(trained):
+    """Running stats repeatedly fed the same batch's statistics converge to
+    exactly those statistics — so eval-mode BN sees the (unbiased) moments
+    of the data it is normalizing, the train-vs-eval parity contract."""
+    params, x = trained
+    _, stats = bcnn.forward_train(params, x)
+    p = params
+    for _ in range(300):
+        p = bcnn.update_running_stats(p, stats)
+    for layer, st in zip([p.conv1, *p.convs, *p.fcs], stats):
+        m, v = st
+        np.testing.assert_allclose(np.asarray(layer.bn_mean), np.asarray(m),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(layer.bn_var), np.asarray(v),
+                                   rtol=1e-4, atol=1e-4)
+
+
 def test_binary_feature_maps_are_bits(trained):
     params, x = trained
     packed = bcnn.fold_model(params)

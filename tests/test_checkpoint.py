@@ -62,6 +62,41 @@ def test_crc_detects_corruption(tmp_path, state):
         ck.restore(str(tmp_path), jax.eval_shape(lambda: state))
 
 
+def test_resave_same_step(tmp_path, state):
+    """Re-saving an existing step must replace it, not crash.
+
+    Regression: the crash-just-after-save restart path (resume from step N,
+    checkpoint step N again) hit ``OSError: [Errno 39] Directory not
+    empty`` because ``os.replace`` cannot replace a non-empty directory."""
+    ck.save(str(tmp_path), 5, state)
+    new_state = jax.tree.map(
+        lambda x: x + 1 if x is not None else None, state,
+        is_leaf=lambda x: x is None)
+    ck.save(str(tmp_path), 5, new_state)          # must not raise
+    got, step = ck.restore(str(tmp_path), jax.eval_shape(lambda: state))
+    assert step == 5
+    _trees_equal(new_state, got)                  # the NEW copy won
+    # no .old.tmp litter left behind
+    assert sorted(os.listdir(str(tmp_path))) == ["step_00000005"]
+
+
+def test_interrupted_resave_recovers(tmp_path, state):
+    """A crash between the two renames of a same-step re-save leaves only
+    the ``.retired`` copy — it must roll back, never be GC'd as litter."""
+    ck.save(str(tmp_path), 7, state)
+    final = os.path.join(str(tmp_path), "step_00000007")
+    os.replace(final, final + ".retired")       # simulate the crash window
+    assert ck.latest_step(str(tmp_path)) == 7   # rolled back into place
+    got, step = ck.restore(str(tmp_path), jax.eval_shape(lambda: state))
+    assert step == 7
+    _trees_equal(state, got)
+    # and a retired copy whose commit DID land is cleaned up, not restored
+    ck.save(str(tmp_path), 7, state)
+    os.makedirs(final + ".retired")
+    ck.save(str(tmp_path), 8, state)
+    assert not os.path.exists(final + ".retired")
+
+
 def test_tmp_litter_is_ignored_and_gcd(tmp_path, state):
     ck.save(str(tmp_path), 1, state)
     litter = os.path.join(str(tmp_path), "step_00000009.tmp")

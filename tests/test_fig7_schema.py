@@ -76,3 +76,16 @@ def test_paper_curves_jsonable(fig7):
     res = _roundtrip(fig7, fig7.run(verbose=False, measure=False))
     assert PLAN_KEYS <= res["plan"].keys()
     assert len(res["paper"]["batch"]) == len(res["paper"]["fpga_fps"])
+
+
+def test_jsonable_rejects_non_finite(fig7):
+    """Regression: ``--json`` used to emit bare ``Infinity`` (invalid
+    JSON) when a stat was non-finite — e.g. the old zero-span throughput
+    from ``serve/slots.py::latency_stats``. ``_jsonable`` must refuse."""
+    import numpy as np
+    for bad in (float("inf"), float("-inf"), float("nan"),
+                np.float64("inf")):
+        with pytest.raises(ValueError, match="non-finite"):
+            fig7._jsonable({"curve": [1.0, bad]})
+    # None is the sanctioned "undefined" encoding and passes through
+    assert fig7._jsonable({"throughput": None}) == {"throughput": None}

@@ -81,6 +81,24 @@ def test_latency_stats_percentiles():
     assert latency_stats(reqs + [Request(rid=99, payload=None)])["n"] == 10
 
 
+def test_latency_stats_zero_span_is_finite_and_json():
+    """Regression: a zero wall span (e.g. a single completed request under
+    a coarse clock) must yield a well-defined, JSON-valid throughput —
+    not ``float("inf")``, which ``json.dump`` emits as bare ``Infinity``
+    and breaks downstream parsers of the fig7 CI artifact."""
+    import json
+    import math
+    req = Request(rid=0, payload=None, done=True,
+                  t_submit=1.0, t_admit=1.0, t_done=1.0)   # span == 0
+    st = latency_stats([req])
+    assert st["n"] == 1
+    assert st["throughput"] is None                         # undefined, not inf
+    for v in st.values():
+        if isinstance(v, float):
+            assert math.isfinite(v)
+    json.loads(json.dumps(st))                              # valid JSON
+
+
 def test_any_active_lifecycle():
     s = SlotScheduler(2, clock=make_clock())
     assert not s.any_active

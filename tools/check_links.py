@@ -38,6 +38,7 @@ DEFAULT_FILES = [
     "docs/ARCHITECTURE.md",
     "docs/SERVING.md",
     "docs/PIPELINE.md",
+    "docs/TRAINING.md",
     "benchmarks/README.md",
     "src/repro/kernels/README.md",
     "src/repro/serve/slots.py",
@@ -46,6 +47,9 @@ DEFAULT_FILES = [
     "src/repro/parallel/pipeline.py",
     "src/repro/parallel/bcnn_pipeline.py",
     "src/repro/parallel/bcnn_data_parallel.py",
+    "src/repro/train/bcnn_train.py",
+    "src/repro/core/bcnn_artifact.py",
+    "src/repro/launch/train_bcnn.py",
     "benchmarks/fig7.py",
 ]
 
