@@ -40,6 +40,14 @@ Three layers of reproduction:
    one-compile-per-plan guard. Uses the same simulated-device shim as
    ``--pipeline``.
 
+6. **Measured, fleet router (``--router``)** — the same streaming
+   discipline scaled *across* engines (serve/router.py): mixed
+   online+bulk Poisson traffic offered to an async router over N
+   replicated engines at fractions of measured fleet capacity. Reports
+   offered rate vs per-priority-class p50/p95/p99 — the curve under test
+   is the SLO scheduler's class separation (online tail protected while
+   bulk soaks the slack) — plus the per-replica one-compile guard.
+
 Every ``--json`` dump embeds the deployment-plan metadata
 (shards / stages / micro-batch) alongside the curves, so a dumped curve
 is reproducible from the artifact alone (schema pinned by
@@ -230,6 +238,105 @@ def run_online(verbose: bool = True, **kw) -> dict:
                   f"p50 {load['p50_ms'][i]:7.1f} ms  "
                   f"p95 {load['p95_ms'][i]:7.1f} ms  "
                   f"p99 {load['p99_ms'][i]:7.1f} ms")
+    return res
+
+
+def router_curve(n_replicas: int = pc.FIG7_ROUTER_REPLICAS,
+                 n_slots: int = pc.SERVE_N_SLOTS, n_requests: int = 32,
+                 load_fracs=pc.FIG7_ROUTER_LOAD_FRACS,
+                 mix: dict | None = None, reps: int = 2,
+                 conv_strategy: str = pc.CONV_STRATEGY,
+                 seed: int = 0) -> dict:
+    """Measured fleet-router load sweep (serve/router.py): offered Poisson
+    rate vs per-priority-class latency percentiles.
+
+    Capacity is probed on ONE replica (the shared occupancy sweep) and
+    scaled by the replica count; the sweep then offers mixed online+bulk
+    traffic (default mix from ``configs.PRIORITY_MIX``'s classes, 3:1) at
+    ``load_fracs`` of that fleet capacity through a threaded router over
+    ``n_replicas`` live replicas. The curve under test is the SLO
+    scheduler's class separation: online p99 should stay near the
+    single-step floor while bulk absorbs the queueing tail. The
+    zero-recompile contract is asserted PER REPLICA after the whole sweep
+    (each replica owns one jit closure compiled exactly once)."""
+    from repro.serve import Router, drive_mixed_poisson
+
+    if mix is None:
+        mix = {"online": 3, "bulk": 1}
+    params = bcnn.init(jax.random.PRNGKey(seed))
+    packed = bcnn.fold_model(params)
+    rng = np.random.default_rng(seed)
+
+    # capacity probe on a throwaway single engine (same folded weights)
+    probe = BCNNEngine.from_packed(packed, n_slots=n_slots, path="xla",
+                                   conv_strategy=conv_strategy)
+    probe.warmup()
+    occ = _occupancy_sweep(probe, n_slots, rng, reps)
+    assert probe.step_cache_size == 1
+    cap_hz = n_replicas * n_slots / (occ["step_ms"][-1] / 1e3)
+
+    router = Router.from_packed(packed, n_replicas=n_replicas,
+                                n_slots=n_slots, path="xla",
+                                conv_strategy=conv_strategy,
+                                history=max(4096, n_requests))
+    load = {"offered_hz": [], "n_rejected": [], "per_class": []}
+    try:
+        for frac in load_fracs:
+            imgs = rng.random((n_requests, 32, 32, 3)).astype(np.float32)
+            d = drive_mixed_poisson(router, imgs, rate_hz=frac * cap_hz,
+                                    mix=mix, seed=seed + 1)
+            load["offered_hz"].append(d["offered_hz"])
+            load["n_rejected"].append(d["n_rejected"])
+            point = {}
+            for nm, st in d["stats"].items():
+                if st["n"] == 0:
+                    point[nm] = {"n": 0}
+                    continue
+                point[nm] = {"n": st["n"],
+                             "p50_ms": st["p50"] * 1e3,
+                             "p95_ms": st["p95"] * 1e3,
+                             "p99_ms": st["p99"] * 1e3}
+            load["per_class"].append(point)
+        replica_compiles = [rep.step_cache_size for rep in router.replicas]
+        assert all(c == 1 for c in replica_compiles), (
+            f"fleet replica recompiled: per-replica jit cache sizes "
+            f"{replica_compiles} after load sweep (contract is exactly 1 "
+            f"per replica)")
+    finally:
+        router.shutdown()
+
+    return {"n_replicas": n_replicas, "n_slots": n_slots,
+            "n_requests": n_requests, "mix": dict(mix),
+            "capacity_hz": cap_hz, "occupancy_sweep": occ,
+            "load_sweep": load, "replica_compilations": replica_compiles,
+            "conv_strategy": conv_strategy,
+            "plan": {"data_shards": 1, "n_stages": 1, "micro_batch": None,
+                     "n_replicas": n_replicas, "n_slots": n_slots}}
+
+
+def run_router(verbose: bool = True, **kw) -> dict:
+    res = router_curve(**kw)
+    if verbose:
+        load = res["load_sweep"]
+        print(f"fleet router ({res['n_replicas']} replicas × "
+              f"{res['n_slots']} slots, XLA-on-CPU, mix "
+              + ", ".join(f"{k}={v}" for k, v in res["mix"].items())
+              + "):")
+        print(f"  fleet capacity estimate: {res['capacity_hz']:.1f} img/s; "
+              f"per-replica jit compilations: "
+              f"{res['replica_compilations']} (contract: 1 each)")
+        for i, hz in enumerate(load["offered_hz"]):
+            rej = load["n_rejected"][i]
+            print(f"  offered {hz:6.1f} req/s"
+                  + (f"  ({rej} shed)" if rej else ""))
+            for nm, st in load["per_class"][i].items():
+                if st["n"] == 0:
+                    print(f"    [{nm}] no arrivals at this point")
+                    continue
+                print(f"    [{nm}] n={st['n']:3d}  "
+                      f"p50 {st['p50_ms']:7.1f} ms  "
+                      f"p95 {st['p95_ms']:7.1f} ms  "
+                      f"p99 {st['p99_ms']:7.1f} ms")
     return res
 
 
@@ -493,6 +600,12 @@ if __name__ == "__main__":
                          "(parallel/bcnn_data_parallel.py): batch size × "
                          "device-shard count; on CPU this forces >=2 "
                          "simulated devices")
+    ap.add_argument("--router", action="store_true",
+                    help="measure the fleet-router load sweep "
+                         "(serve/router.py): offered rate vs per-class "
+                         "p99 over replicated engines")
+    ap.add_argument("--replicas", type=int, default=pc.FIG7_ROUTER_REPLICAS,
+                    help="replica count for --router")
     ap.add_argument("--slots", type=int, default=pc.SERVE_N_SLOTS)
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--reps", type=int, default=2,
@@ -504,6 +617,9 @@ if __name__ == "__main__":
         out = run_pipeline(n_slots=args.slots)
     elif args.offline:
         out = run_offline(reps=args.reps)
+    elif args.router:
+        out = run_router(n_replicas=args.replicas, n_slots=args.slots,
+                         n_requests=args.requests)
     elif args.online:
         out = run_online(n_slots=args.slots, n_requests=args.requests)
     else:

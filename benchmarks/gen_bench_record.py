@@ -1,0 +1,103 @@
+"""Per-PR benchmark record (ROADMAP item 4): distill the Fig. 7 serving
+sweeps into a small checked-in ``BENCH_<n>.json`` so the repo carries a
+perf trajectory PRs can be compared against — benchmark dumps themselves
+are gitignored CI artifacts, this record is not.
+
+The record holds HEADLINE numbers + deployment-plan metadata only (the
+full curves stay in the ``--json`` artifacts): online capacity +
+occupancy flatness, offline per-plan peak throughput, fleet-router
+per-class p99 at the swept load fractions. Every compile-count invariant
+is embedded so the schema tier (tests/test_fig7_schema.py) can re-assert
+the zero-recompile contracts from the artifact alone. Wall-clock values
+are machine-relative; the schema test validates structure and contracts,
+not absolute numbers.
+
+    PYTHONPATH=src python -m benchmarks.gen_bench_record --pr 6 \
+        [--out BENCH_6.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+# the offline sweep demonstrates >=1 multi-shard plan: force 2 simulated
+# host devices before any jax import (same shim fig7.py uses for its CLI)
+from repro.launch.device_shim import force_host_devices
+
+force_host_devices(2)
+
+SCHEMA_VERSION = 1
+
+
+def build_record(pr: int, *, fast: bool = False) -> dict:
+    from benchmarks import fig7
+
+    n_req = 12 if fast else 24
+    reps = 1 if fast else 2
+
+    online = fig7.online_curve(n_requests=n_req, reps=reps)
+    occ = online["occupancy_sweep"]
+    offline = fig7.offline_curve(reps=reps)
+    router = fig7.router_curve(n_requests=n_req, reps=reps)
+
+    return {
+        "record": pr,
+        "schema_version": SCHEMA_VERSION,
+        "online": {
+            "plan": online["plan"],
+            "capacity_hz": online["capacity_hz"],
+            "step_compilations": online["step_compilations"],
+            # max/min step wall-clock across occupancies 1..n_slots — the
+            # paper's flat-curve claim as one scalar (≈1.0 is flat)
+            "occupancy_spread": max(occ["step_ms"]) / min(occ["step_ms"]),
+            "p99_ms": online["load_sweep"]["p99_ms"],
+        },
+        "offline": {
+            "n_stages": offline["n_stages"],
+            "micro_batch": offline["micro_batch"],
+            "curves": [{"plan": {k: c["plan"][k] for k in
+                                 ("data_shards", "n_stages", "micro_batch")},
+                        "peak_img_per_s": max(c["img_per_s"]),
+                        "compilations": c["compilations"]}
+                       for c in offline["curves"]],
+        },
+        "router": {
+            "plan": router["plan"],
+            "mix": router["mix"],
+            "capacity_hz": router["capacity_hz"],
+            "replica_compilations": router["replica_compilations"],
+            "offered_hz": router["load_sweep"]["offered_hz"],
+            "per_class_p99_ms": [
+                {nm: st.get("p99_ms") for nm, st in point.items()}
+                for point in router["load_sweep"]["per_class"]],
+            "n_rejected": router["load_sweep"]["n_rejected"],
+        },
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pr", type=int, required=True,
+                    help="record number (BENCH_<n>.json)")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="output path (default: BENCH_<pr>.json in the "
+                         "repo root)")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller request counts / single reps (CI smoke)")
+    args = ap.parse_args(argv)
+
+    from benchmarks.fig7 import _jsonable
+
+    rec = _jsonable(build_record(args.pr, fast=args.fast))
+    out = Path(args.out) if args.out else (
+        Path(__file__).resolve().parent.parent / f"BENCH_{args.pr}.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

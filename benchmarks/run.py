@@ -16,7 +16,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default="all",
                     choices=["all", "table3", "table5", "fig7",
                              "fig7-online", "fig7-pipeline", "fig7-offline",
-                             "roofline", "kernels"])
+                             "fig7-router", "roofline", "kernels"])
     ap.add_argument("--no-measure", action="store_true",
                     help="skip wall-clock measurements (CI mode)")
     args = ap.parse_args(argv)
@@ -56,7 +56,9 @@ def main(argv=None) -> None:
         bench("fig7-online", lambda: fig7.run_online())
         bench("fig7-pipeline", lambda: fig7.run_pipeline())
         bench("fig7-offline", lambda: fig7.run_offline())
-    elif args.only in ("fig7-online", "fig7-pipeline", "fig7-offline"):
+        bench("fig7-router", lambda: fig7.run_router())
+    elif args.only in ("fig7-online", "fig7-pipeline", "fig7-offline",
+                       "fig7-router"):
         print(f"{args.only} skipped: it is pure wall-clock measurement and "
               "--no-measure was given")
     bench("kernels", lambda: kernels.run(measure=not args.no_measure))

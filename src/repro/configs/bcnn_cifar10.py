@@ -40,6 +40,23 @@ FIG7_BATCH_SIZES = (16, 32, 64, 128, 256, 512)
 SERVE_N_SLOTS = 4
 FIG7_ONLINE_LOAD_FRACS = (0.25, 0.6, 0.9)
 
+# Fleet serving (serve/router.py, launch/serve_bcnn.py --replicas): the
+# async request router over N replicated engines. ROUTER_REPLICAS = 1
+# keeps the single-engine path (the router tier is opt-in);
+# ROUTER_MAX_QUEUE bounds the admission backlog (past it requests are
+# shed with a typed RouterOverload); ONLINE_DEADLINE_S is the latency SLO
+# of the "online" traffic class (the "bulk" class is best-effort);
+# PRIORITY_MIX is the default offered-traffic composition of the mixed
+# Poisson driver ("class=weight,..."). The `benchmarks/fig7.py --router`
+# sweep drives FIG7_ROUTER_REPLICAS replicas at FIG7_ROUTER_LOAD_FRACS
+# fractions of measured fleet capacity.
+ROUTER_REPLICAS = 1
+ROUTER_MAX_QUEUE = 256
+ONLINE_DEADLINE_S = 0.5
+PRIORITY_MIX = "online=3,bulk=1"
+FIG7_ROUTER_REPLICAS = 2
+FIG7_ROUTER_LOAD_FRACS = (0.25, 0.6, 0.9)
+
 # Stage-pipelined deployment forward (parallel/bcnn_pipeline.py): number of
 # cost-balanced pipeline stages the packed 9-layer forward is cut into
 # (1 = single-device make_packed_forward, the default) and the micro-batch

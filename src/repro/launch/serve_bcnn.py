@@ -24,6 +24,12 @@ Usage (CPU-scale):
         --artifact /tmp/bcnn_art
         # serve trained weights from a deployment artifact
         # (docs/TRAINING.md walks the full train → export → serve cycle)
+    PYTHONPATH=src python -m repro.launch.serve_bcnn --replicas 2 --rate 8
+        # FLEET tier: the async router (serve/router.py) over 2 engine
+        # replicas, mixed online+bulk Poisson traffic with SLO-aware
+        # scheduling; add --rolling-swap to hot-swap weights across the
+        # fleet mid-drive without dropping a request (docs/SERVING.md
+        # "Fleet serving")
 """
 from __future__ import annotations
 
@@ -43,6 +49,81 @@ from repro.configs import bcnn_cifar10 as pc
 from repro.core import bcnn
 from repro.data import SyntheticImages
 from repro.serve import BCNNEngine, drive_poisson
+
+
+def parse_priority_mix(spec: str) -> dict[str, int]:
+    """'online=3,bulk=1' → {"online": 3, "bulk": 1} (validated)."""
+    mix = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, w = part.partition("=")
+        try:
+            weight = int(w)
+        except ValueError:
+            raise SystemExit(f"--priority-mix: bad weight in {part!r} "
+                             f"(want 'class=int,...')")
+        if weight < 0:
+            raise SystemExit(f"--priority-mix: negative weight in {part!r}")
+        mix[name.strip()] = weight
+    if not mix or not any(mix.values()):
+        raise SystemExit("--priority-mix: no positive weights")
+    return mix
+
+
+def serve_fleet(packed, x, args):
+    """The fleet tier: async router over ``--replicas`` engine replicas."""
+    from repro.serve import Router, drive_mixed_poisson
+
+    mix = parse_priority_mix(args.priority_mix)
+    router = Router.from_packed(
+        packed, n_replicas=args.replicas, n_slots=args.slots,
+        path=args.path, conv_strategy=args.conv_strategy,
+        max_queue=args.max_queue, history=max(4096, args.requests))
+    unknown = set(mix) - set(router.class_names)
+    if unknown:
+        raise SystemExit(f"--priority-mix: unknown class(es) {sorted(unknown)}"
+                         f" (router classes: {sorted(router.class_names)})")
+    try:
+        swap_to = None
+        if args.rolling_swap:
+            # hot-swap target: a re-seeded fold of the same architecture
+            swap_to = bcnn.fold_model(bcnn.init(jax.random.PRNGKey(
+                args.seed + 1)))
+        print(f"fleet: {args.replicas} replicas × {args.slots} slots, "
+              f"admission queue {args.max_queue}, mix "
+              + ", ".join(f"{k}={v}" for k, v in mix.items()))
+        if args.rate > 0:
+            d = drive_mixed_poisson(router, x, args.rate, mix=mix,
+                                    seed=args.seed, swap_to=swap_to)
+            print(f"mixed Poisson arrivals @ {args.rate:.1f} req/s: "
+                  f"{d['n_accepted']}/{d['n_offered']} admitted, "
+                  f"{d['n_rejected']} shed")
+            if swap_to is not None:
+                print(f"  rolling swap mid-drive: weight epochs served = "
+                      f"{sorted(d['epochs'])} (zero drops)")
+        else:
+            reqs = router.submit_batch(x, cls="bulk")
+            for r in reqs:
+                r.wait(timeout=120.0)
+            print(f"batch-of-{args.requests} submitted up front via router")
+        for cls in router.class_names:
+            st = router.stats(cls)
+            if st["n"] == 0:
+                continue
+            miss = (f", deadline-miss {st['deadline_miss_frac']*100:.0f}%"
+                    if st.get("deadline_miss_frac") is not None else "")
+            print(f"  [{cls}] n={st['n']}  p50 {st['p50']*1e3:7.1f} ms  "
+                  f"p95 {st['p95']*1e3:7.1f} ms  "
+                  f"p99 {st['p99']*1e3:7.1f} ms{miss}")
+        for rep in router.replicas:
+            print(f"  replica {rep.id}: served {rep.served}, weight epoch "
+                  f"{rep.epoch}, step compiled {rep.step_cache_size}×")
+            assert rep.step_cache_size == 1, "replica recompiled"
+    finally:
+        router.shutdown()
+    return 0
 
 
 def main(argv=None):
@@ -80,6 +161,23 @@ def main(argv=None):
                     help="serve all --requests images as ONE bulk batch "
                          "through classify_batch (the paper's large-batch "
                          "scenario) instead of streaming them")
+    ap.add_argument("--replicas", type=int, default=pc.ROUTER_REPLICAS,
+                    help="serve through the async fleet router "
+                         "(serve/router.py) over N engine replicas, each "
+                         "stepped on its own thread; 1 = single engine, "
+                         "no router (the default)")
+    ap.add_argument("--priority-mix", default=pc.PRIORITY_MIX,
+                    help="offered-traffic composition for the router "
+                         "drive, 'class=weight,...' over the classes "
+                         "online (deadline-carrying) and bulk "
+                         "(best-effort)")
+    ap.add_argument("--max-queue", type=int, default=pc.ROUTER_MAX_QUEUE,
+                    help="router admission-queue bound; past it requests "
+                         "are shed with a typed RouterOverload")
+    ap.add_argument("--rolling-swap", action="store_true",
+                    help="with --replicas >= 2: hot-swap the fleet to a "
+                         "re-seeded weight set halfway through the drive "
+                         "(rolling walk — traffic never drops)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -93,6 +191,13 @@ def main(argv=None):
     else:
         params = bcnn.init(jax.random.PRNGKey(args.seed))
         packed = bcnn.fold_model(params)
+    x, _ = SyntheticImages(global_batch=args.requests,
+                           seed=args.seed).batch(0)
+    if args.replicas >= 2:
+        return serve_fleet(packed, x, args)
+    if args.rolling_swap:
+        raise SystemExit("--rolling-swap needs --replicas >= 2 "
+                         "(the rolling walk is a fleet-tier operation)")
     eng = BCNNEngine.from_packed(packed, n_slots=args.slots, path=args.path,
                                  conv_strategy=args.conv_strategy,
                                  pipeline_stages=args.pipeline_stages,
@@ -114,8 +219,6 @@ def main(argv=None):
               f"{plan.n_stages} stage(s), micro-batch {plan.micro_batch} "
               f"(chunk {plan.chunk}; classify_batch routes batches >= "
               f"{eng.batch_threshold})")
-    x, _ = SyntheticImages(global_batch=args.requests,
-                           seed=args.seed).batch(0)
 
     if args.offline:
         # warm (one compile per plan — any batch size reuses it), then time

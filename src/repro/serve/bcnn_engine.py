@@ -161,6 +161,13 @@ class BCNNEngine:
         return eng
 
     @property
+    def clock(self) -> Callable[[], float]:
+        """The engine's time source (the one its latency stamps use).
+        ``drive_poisson`` times arrivals with it so an injected
+        deterministic clock governs the WHOLE drive, not just the stamps."""
+        return self.sched.clock
+
+    @property
     def forward(self) -> Callable:
         """The step's forward (the jit-wrapped closure, or the self-jitting
         ``PipelinedForward`` — whose ``plan``/``devices`` callers may
@@ -274,13 +281,16 @@ class BCNNEngine:
                 images.shape[1:] != self.input_shape:
             raise ValueError(f"batch shape {images.shape} != (N, "
                              f"{', '.join(map(str, self.input_shape))})")
-        if self._batch_fn is not None and (
-                len(images) >= self._batch_threshold or len(images) == 0):
+        if len(images) == 0:
+            # zero images carry zero information: answer host-side before
+            # either route (the bulk path used to pay a full padded-chunk
+            # device round-trip here). Width is known for from_packed
+            # engines; 0 for opaque forwards. ``batch_cache_size`` is
+            # untouched — the bulk forward neither compiles nor runs.
+            return np.zeros((0, self._n_classes or 0), np.float32)
+        if self._batch_fn is not None and len(images) >= self._batch_threshold:
             return np.asarray(
                 jax.block_until_ready(self._batch_fn(jnp.asarray(images))))
-        if len(images) == 0:
-            # width known for from_packed engines; 0 for opaque forwards
-            return np.zeros((0, self._n_classes or 0), np.float32)
         rids = [self.submit(img) for img in images]
         out = self.run()
         return np.stack([out[r] for r in rids])
@@ -341,6 +351,13 @@ def drive_poisson(engine: BCNNEngine, images: np.ndarray, rate_hz: float,
     ``results`` and ``stats`` cover exactly this drive's requests
     (p50/p95/p99 end-to-end latency and achieved throughput) — requests
     already queued on the engine are served alongside but excluded.
+
+    Arrival timing uses the ENGINE's clock (``BCNNEngine.clock``), not raw
+    ``time.perf_counter`` — so an engine built with an injected
+    deterministic clock keeps arrivals and latency stamps on one timeline
+    (they desynchronized before). An injected clock must advance on its own
+    (each call returns a later value), since the idle-wait path can only
+    ``sleep`` real wall-clock time.
     """
     if rate_hz <= 0:
         raise ValueError(f"rate_hz must be > 0, got {rate_hz}")
@@ -356,12 +373,14 @@ def drive_poisson(engine: BCNNEngine, images: np.ndarray, rate_hz: float,
     arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, size=n))
     if warmup:
         engine.warmup()
+    clock = engine.clock
+    real_time = clock is time.perf_counter   # sleeping only advances THIS
     my_rids: set[int] = set()
     results: dict[int, np.ndarray] = {}
-    t0 = time.perf_counter()
+    t0 = clock()
     nxt = 0
     while len(results) < n:
-        now = time.perf_counter() - t0
+        now = clock() - t0
         while nxt < n and arrivals[nxt] <= now:
             my_rids.add(engine.submit(images[nxt]))
             nxt += 1
@@ -369,7 +388,7 @@ def drive_poisson(engine: BCNNEngine, images: np.ndarray, rate_hz: float,
             results.update((rid, logits)
                            for rid, logits in engine.step().items()
                            if rid in my_rids)
-        elif nxt < n:
+        elif nxt < n and real_time:
             time.sleep(max(0.0, min(arrivals[nxt] - now, 0.05)))
     mine = [r for r in engine.sched.finished if r.rid in my_rids]
     return {"results": results, "stats": latency_stats(mine),

@@ -24,6 +24,7 @@ the batch).
 """
 from __future__ import annotations
 
+from collections import deque
 from typing import Callable
 
 import jax
@@ -66,7 +67,9 @@ class ServingEngine:
         # recurrent families keep per-slot states we can reset independently;
         # attention caches are reset by masking (length bookkeeping is host-side)
         self._pos = np.zeros((n_slots,), np.int64)       # host: tokens consumed
-        self._pending = [[] for _ in range(n_slots)]     # host: unconsumed input
+        # deques: prefill consumes from the head every tick, and a list's
+        # pop(0) is O(prompt) per token (O(n²) over a long prompt)
+        self._pending: list[deque] = [deque() for _ in range(n_slots)]
 
     # ------------------------------------------------------------------ api
     def submit(self, prompt_tokens: list[int], max_new_tokens: int = 32,
@@ -99,7 +102,7 @@ class ServingEngine:
     # ------------------------------------------------------------- internals
     def _admit(self) -> bool:
         for i, req in self.sched.admit():
-            self._pending[i] = list(req.payload)
+            self._pending[i] = deque(req.payload)
             self._pos[i] = 0
             self.state = self._reset_slot(self.state, i)
             if req.frontend is not None:
@@ -140,7 +143,7 @@ class ServingEngine:
         nxt = np.asarray(nxt)
         for i, req in self.sched.occupied():
             if self._pending[i]:
-                self._pending[i].pop(0)
+                self._pending[i].popleft()
                 self._pos[i] += 1
                 if self._pending[i]:
                     continue                     # still prefilling

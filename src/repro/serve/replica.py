@@ -1,0 +1,218 @@
+"""One replicated BCNN engine stepped on its own thread.
+
+The fleet tier (``serve/router.py``) scales the paper's §6.3 online-request
+scenario *across* engines: N replicas of the streaming ``BCNNEngine``
+(``serve/bcnn_engine.py``), each stepped continuously on a dedicated
+worker thread, fed by a router that owns admission and scheduling. This
+module is the per-replica half of that split:
+
+* **single-owner engine** — the wrapped engine is touched ONLY by the
+  replica's worker thread (or, in the deterministic non-threaded mode, by
+  whoever calls ``pump()``), so none of the engine's single-driver
+  contracts change;
+* **ordered work stream** — work items and control commands (weight swaps)
+  live in ONE FIFO inbox: a swap executes exactly between engine flushes,
+  so every request is served by a well-defined weight epoch and the
+  replica can report that epoch with each result;
+* **load accounting** — ``load`` counts accepted-but-not-completed items,
+  the quantity the router's least-loaded dispatch compares;
+* **epoch stamping** — ``epoch`` starts at 0 and increments per executed
+  swap; completion callbacks receive it, which is how the router's rolling
+  swap proves "bit-exact logits per weight epoch" under live traffic
+  (tests/test_router.py).
+
+Threading contract: ``enqueue``/``request_swap``/``stop`` may be called
+from any thread; everything else that touches the engine runs on the
+worker thread (``threaded=True``) or inside ``pump()`` (``threaded=False``
+— the mode the injected-clock unit tests drive deterministically).
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Any, Callable
+
+import numpy as np
+
+
+class SwapTicket:
+    """Handle for an enqueued weight swap: ``wait()`` blocks until the
+    replica thread executed it (or re-raises the failure, e.g. an
+    incompatible replacement rejected by ``assert_swap_compatible``)."""
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._error: BaseException | None = None
+
+    def _resolve(self, error: BaseException | None = None) -> None:
+        self._error = error
+        self._event.set()
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: float | None = None) -> None:
+        if not self._event.wait(timeout):
+            raise TimeoutError("swap not executed within timeout")
+        if self._error is not None:
+            raise self._error
+
+
+class _SwapCmd:
+    __slots__ = ("packed", "ticket")
+
+    def __init__(self, packed, ticket: SwapTicket):
+        self.packed = packed
+        self.ticket = ticket
+
+
+class EngineReplica:
+    """A ``BCNNEngine`` plus its worker thread and FIFO work inbox.
+
+    ``on_done(replica, item, logits, epoch)`` is invoked (on the worker
+    thread) once per completed work item — the router uses it to stamp
+    completion and resolve the caller's future. ``item`` is whatever
+    ``enqueue`` was given; the replica only requires ``item.image`` to be
+    the ``(H, W, C)`` float32 array to classify.
+    """
+
+    def __init__(self, engine, *, replica_id: int = 0, threaded: bool = True,
+                 on_done: Callable[["EngineReplica", Any, np.ndarray, int],
+                                   None] | None = None):
+        self.engine = engine
+        self.id = replica_id
+        self.on_done = on_done
+        self._inbox: deque[Any] = deque()     # work items + _SwapCmds, FIFO
+        self._lock = threading.Lock()
+        self._wake = threading.Condition(self._lock)
+        self._inflight = 0                    # accepted, not yet completed
+        self._served = 0
+        self._epoch = 0
+        self._stopping = False
+        self._threaded = threaded
+        self._thread: threading.Thread | None = None
+        if threaded:
+            self._thread = threading.Thread(
+                target=self._loop, name=f"bcnn-replica-{replica_id}",
+                daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------------ api
+    @property
+    def load(self) -> int:
+        """Accepted-but-not-completed work items (inbox + in-engine). The
+        router's least-loaded dispatch key; 0 means fully drained."""
+        with self._lock:
+            return self._inflight
+
+    @property
+    def served(self) -> int:
+        """Total work items completed over the replica's lifetime."""
+        with self._lock:
+            return self._served
+
+    @property
+    def epoch(self) -> int:
+        """Weight epoch: 0 at construction, +1 per executed swap."""
+        with self._lock:
+            return self._epoch
+
+    @property
+    def step_cache_size(self) -> int:
+        """The engine's zero-recompile counter (contract: stays 1)."""
+        return self.engine.step_cache_size
+
+    def enqueue(self, item: Any) -> None:
+        """Hand one work item (``item.image`` is the input) to the replica.
+        Thread-safe; the worker picks it up at its next iteration."""
+        with self._wake:
+            if self._stopping:
+                raise RuntimeError(f"replica {self.id} is stopped")
+            self._inbox.append(item)
+            self._inflight += 1
+            self._wake.notify()
+
+    def request_swap(self, new_packed) -> SwapTicket:
+        """Enqueue a weight swap into the FIFO work stream. It executes
+        after every item enqueued before it — the router drains the
+        replica first, so in the rolling-swap walk the swap runs on an
+        idle engine. Returns a ``SwapTicket`` to wait on."""
+        ticket = SwapTicket()
+        with self._wake:
+            if self._stopping:
+                raise RuntimeError(f"replica {self.id} is stopped")
+            self._inbox.append(_SwapCmd(new_packed, ticket))
+            self._wake.notify()
+        return ticket
+
+    def stop(self, timeout: float | None = 30.0) -> None:
+        """Stop the worker thread after it finishes the remaining inbox."""
+        with self._wake:
+            self._stopping = True
+            self._wake.notify()
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    def pump(self) -> int:
+        """Non-threaded mode: process the whole current inbox on the
+        calling thread. Returns the number of work items completed. The
+        deterministic sibling of one worker-loop iteration — unit tests
+        drive it with injected clocks."""
+        if self._threaded:
+            raise RuntimeError("pump() is for threaded=False replicas; "
+                               "a threaded replica's worker owns the engine")
+        with self._lock:
+            items = list(self._inbox)
+            self._inbox.clear()
+        return self._process(items)
+
+    # ------------------------------------------------------------- internals
+    def _loop(self) -> None:
+        while True:
+            with self._wake:
+                while not self._inbox and not self._stopping:
+                    self._wake.wait()
+                if not self._inbox and self._stopping:
+                    return
+                items = list(self._inbox)
+                self._inbox.clear()
+            self._process(items)
+
+    def _process(self, items: list) -> int:
+        """Run the FIFO item stream: consecutive work items are flushed
+        through the engine together (they share steps, exactly like
+        co-arriving requests on a lone engine); a swap command forms an
+        epoch boundary between flushes."""
+        completed = 0
+        batch: list = []
+        for item in items:
+            if isinstance(item, _SwapCmd):
+                completed += self._flush(batch)
+                batch = []
+                try:
+                    self.engine.swap_packed(item.packed)
+                except BaseException as e:   # reject ≠ die: report via ticket
+                    item.ticket._resolve(e)
+                else:
+                    with self._lock:
+                        self._epoch += 1
+                    item.ticket._resolve()
+            else:
+                batch.append(item)
+        return completed + self._flush(batch)
+
+    def _flush(self, batch: list) -> int:
+        if not batch:
+            return 0
+        rid_to_item = {self.engine.submit(item.image): item
+                       for item in batch}
+        out = self.engine.run()
+        epoch = self._epoch
+        with self._lock:
+            self._inflight -= len(batch)
+            self._served += len(batch)
+        if self.on_done is not None:
+            for rid, item in rid_to_item.items():
+                self.on_done(self, item, out[rid], epoch)
+        return len(batch)

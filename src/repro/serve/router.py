@@ -1,0 +1,535 @@
+"""Async request router over replicated BCNN engines — the fleet tier.
+
+The paper's headline claim (§6.3, Fig. 7) is batch-size-insensitive
+throughput for *online individual requests*; one streaming ``BCNNEngine``
+(``serve/bcnn_engine.py``) reproduces that discipline on one device, but
+every serving path so far was a single synchronous driver over ONE engine.
+This module scales the same discipline *across* engines — the
+million-user tier the ROADMAP names:
+
+* **bounded admission with backpressure** — the router queue holds at most
+  ``max_queue`` undispatched requests; past that, ``submit`` sheds load
+  with a typed ``RouterOverload`` (callers see an explicit reject, never
+  an unbounded queue or a silent drop);
+* **SLO-aware scheduling, not pure FIFO** — requests carry a
+  ``RequestClass`` (priority rank + optional latency deadline); the
+  backlog is ordered by (priority, earliest-absolute-deadline, arrival),
+  so latency-sensitive traffic overtakes bulk work while arrival order is
+  preserved *within* a class (FIFO-within-class fairness,
+  tests/test_router.py);
+* **least-loaded dispatch over N replicas** — each replica
+  (``serve/replica.py``) steps its own ``BCNNEngine`` on its own thread;
+  the router hands a request to the least-loaded live replica, capped at
+  ``dispatch_depth`` in-flight items each so the backlog stays in the
+  router where it can still be re-ordered and re-routed;
+* **rolling weight swap** — ``rolling_swap`` walks the replica set one at
+  a time: pause dispatch to a replica, let it drain, hot-swap
+  (``BCNNEngine.swap_packed``, zero recompiles), resume. The rest of the
+  fleet keeps serving, so a model update never drops traffic; every
+  result is stamped with the weight *epoch* that produced it;
+* **mixed-traffic co-scheduling** — ``submit_batch``/``classify_batch``
+  fold bulk offline work into the same fleet as low-priority requests
+  instead of a separate ``batch_threshold`` device path, so online p99 is
+  protected by the scheduler, not by a hard routing cliff.
+
+Deterministic tests use ``threaded=False``: no worker threads, the caller
+``pump()``s the router (dispatch + every replica) on one thread with an
+injected clock. The CLI (``launch/serve_bcnn.py --replicas``) and the
+``benchmarks/fig7.py --router`` load sweep run ``threaded=True``.
+"""
+from __future__ import annotations
+
+import heapq
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Sequence
+
+import numpy as np
+
+from repro.serve.bcnn_engine import BCNNEngine
+from repro.serve.replica import EngineReplica
+from repro.serve.slots import latency_stats
+
+
+@dataclass(frozen=True)
+class RequestClass:
+    """A traffic class: scheduling priority + optional latency SLO.
+
+    ``priority`` ranks classes (lower = more urgent; strict — a queued
+    higher-priority request always dispatches first). ``deadline_s`` is
+    the per-request latency target: within a priority rank the backlog is
+    served earliest-absolute-deadline first, and per-class stats report
+    the fraction of finished requests that missed it. ``None`` means
+    best-effort (no deadline ordering or accounting).
+    """
+    name: str
+    priority: int = 0
+    deadline_s: float | None = None
+
+
+#: Default traffic classes: latency-sensitive online requests (the paper's
+#: §6.3 individual-request scenario) and best-effort bulk/offline work.
+ONLINE = RequestClass("online", priority=0, deadline_s=0.5)
+BULK = RequestClass("bulk", priority=1, deadline_s=None)
+DEFAULT_CLASSES = (ONLINE, BULK)
+
+
+class RouterOverload(RuntimeError):
+    """Typed backpressure signal: the admission queue is full and the
+    request (or whole batch — batches admit atomically) was shed. Carries
+    the queue state so callers can implement retry/defer policies."""
+
+    def __init__(self, cls_name: str, queue_depth: int, max_queue: int,
+                 n_requested: int = 1):
+        self.cls_name = cls_name
+        self.queue_depth = queue_depth
+        self.max_queue = max_queue
+        self.n_requested = n_requested
+        super().__init__(
+            f"router queue full: {queue_depth}/{max_queue} queued, "
+            f"cannot admit {n_requested} '{cls_name}' request(s)")
+
+
+@dataclass(eq=False)
+class RouterRequest:
+    """One routed request: stamps, class, result, and provenance.
+
+    Mirrors ``serve/slots.py::Request`` semantics — ``latency`` /
+    ``queue_wait`` are ``None`` until the stamps exist, so
+    ``serve/slots.py::latency_stats`` aggregates these directly.
+    ``epoch``/``replica_id`` record which weight epoch on which replica
+    produced ``logits`` (the rolling-swap bit-exactness evidence).
+    """
+    rid: int
+    cls: RequestClass
+    image: Any = None               # dropped once the replica consumed it
+    t_submit: float | None = None
+    t_dispatch: float | None = None
+    t_done: float | None = None
+    logits: np.ndarray | None = None
+    epoch: int | None = None
+    replica_id: int | None = None
+    done: bool = False
+    _event: threading.Event = field(default_factory=threading.Event,
+                                    repr=False)
+
+    @property
+    def latency(self) -> float | None:
+        if self.t_done is None or self.t_submit is None:
+            return None
+        return self.t_done - self.t_submit
+
+    @property
+    def queue_wait(self) -> float | None:
+        """Seconds in the router queue before dispatch to a replica."""
+        if self.t_dispatch is None or self.t_submit is None:
+            return None
+        return self.t_dispatch - self.t_submit
+
+    @property
+    def deadline(self) -> float | None:
+        """Absolute completion deadline on the router clock, or None."""
+        if self.cls.deadline_s is None or self.t_submit is None:
+            return None
+        return self.t_submit + self.cls.deadline_s
+
+    @property
+    def deadline_missed(self) -> bool | None:
+        """True/False once finished (None for no-deadline classes or
+        unfinished requests)."""
+        if self.deadline is None or self.latency is None:
+            return None
+        return self.t_done > self.deadline
+
+    def wait(self, timeout: float | None = None) -> np.ndarray:
+        """Block until served (threaded routers), then return the logits."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.rid} not served in time")
+        return self.logits
+
+
+class Router:
+    """Admission + scheduling front-end over ``EngineReplica``s.
+
+    ``engines`` may be heterogeneous in nothing that matters here: each
+    must accept the same input shape. Build from a packed net with
+    ``Router.from_packed``. ``dispatch_depth`` caps in-flight items per
+    replica (default ``2 × n_slots``: one stepping batch + one queued
+    behind it) — the rest of the backlog stays router-side where the
+    SLO scheduler can still reorder it.
+    """
+
+    def __init__(self, engines: Sequence[BCNNEngine], *,
+                 classes: Sequence[RequestClass] = DEFAULT_CLASSES,
+                 max_queue: int = 256,
+                 dispatch_depth: int | None = None,
+                 clock: Callable[[], float] = time.perf_counter,
+                 history: int = 4096,
+                 threaded: bool = True):
+        if not engines:
+            raise ValueError("need at least one engine")
+        names = [c.name for c in classes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate class names: {names}")
+        if max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.classes = tuple(classes)
+        self._by_name = {c.name: c for c in classes}
+        self.max_queue = max_queue
+        self.threaded = threaded
+        self.clock = clock
+        self._depth = (dispatch_depth if dispatch_depth is not None
+                       else 2 * max(e.n_slots for e in engines))
+        self._lock = threading.Lock()
+        self._heap: list[tuple[int, float, int, RouterRequest]] = []
+        self._seq = 0
+        self._next_rid = 0
+        self._paused: set[int] = set()
+        self._submitted = {c.name: 0 for c in classes}
+        self._rejected = {c.name: 0 for c in classes}
+        self._completed = {c.name: 0 for c in classes}
+        self._finished = {c.name: deque(maxlen=history) for c in classes}
+        self._replicas = [
+            EngineReplica(e, replica_id=i, threaded=threaded,
+                          on_done=self._on_done)
+            for i, e in enumerate(engines)]
+
+    # ---------------------------------------------------------- construction
+    @classmethod
+    def from_packed(cls, packed, *, n_replicas: int = 2,
+                    n_slots: int | None = None, path: str = "auto",
+                    conv_strategy: str | None = None,
+                    warmup: bool = True,
+                    clock: Callable[[], float] = time.perf_counter,
+                    history: int = 4096, **router_kw) -> "Router":
+        """N independent ``BCNNEngine.from_packed`` replicas behind one
+        router. Each replica owns its own jit closure (so each compiles
+        exactly once: ``step_cache_size == 1`` *per replica*); ``warmup``
+        compiles them before any traffic so the first requests don't pay
+        N compilations."""
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        kw = {} if n_slots is None else {"n_slots": n_slots}
+        engines = [BCNNEngine.from_packed(packed, path=path,
+                                          conv_strategy=conv_strategy,
+                                          clock=clock, history=history, **kw)
+                   for _ in range(n_replicas)]
+        if warmup:
+            for e in engines:
+                e.warmup()
+        return cls(engines, clock=clock, history=history, **router_kw)
+
+    @property
+    def replicas(self) -> tuple[EngineReplica, ...]:
+        return tuple(self._replicas)
+
+    @property
+    def class_names(self) -> tuple[str, ...]:
+        return tuple(c.name for c in self.classes)
+
+    # ------------------------------------------------------------------ api
+    def submit(self, image: np.ndarray,
+               cls: RequestClass | str = "online") -> RouterRequest:
+        """Admit one request (or shed it with ``RouterOverload``). Returns
+        its ticket; ``.wait()`` for the logits on a threaded router."""
+        return self._admit([image], self._resolve_class(cls))[0]
+
+    def submit_batch(self, images: Iterable[np.ndarray],
+                     cls: RequestClass | str = "bulk"
+                     ) -> list[RouterRequest]:
+        """Admit a bulk batch ATOMICALLY: either every image is queued (at
+        the class's priority, co-scheduled with everything else) or the
+        whole batch is shed with one ``RouterOverload`` — a half-admitted
+        batch is useless to an offline caller."""
+        return self._admit(list(images), self._resolve_class(cls))
+
+    def classify_batch(self, images: np.ndarray,
+                       cls: RequestClass | str = "bulk") -> np.ndarray:
+        """Bulk convenience: ``submit_batch`` + gather, → (N, n_classes)
+        logits in input order. Unlike the single-engine
+        ``BCNNEngine.classify_batch`` there is no ``batch_threshold``
+        cliff: the batch rides the scheduler at its class's priority, so
+        co-arriving online traffic keeps its latency SLO while the batch
+        soaks up the remaining fleet capacity."""
+        reqs = self.submit_batch(np.asarray(images, np.float32), cls=cls)
+        if not self.threaded:
+            self.run_until_idle()
+            return np.stack([r.logits for r in reqs])
+        return np.stack([r.wait() for r in reqs])
+
+    def rolling_swap(self, new_packed, *, timeout: float = 60.0) -> int:
+        """Hot-swap the fleet's weights one replica at a time, never
+        dropping traffic: pause dispatch to replica i (the scheduler keeps
+        feeding the others), wait for it to drain, swap on its idle engine
+        (``BCNNEngine.swap_packed`` — zero recompiles), resume, move on.
+        Returns the number of replicas swapped. An incompatible
+        replacement is rejected by the FIRST replica's engine before any
+        replica swapped, so a failed swap leaves the fleet consistent."""
+        swapped = 0
+        for rep in self._replicas:
+            with self._lock:
+                self._paused.add(rep.id)
+            try:
+                self._dispatch()            # re-route its share of backlog
+                self._drain_replica(rep, timeout)
+                ticket = rep.request_swap(new_packed)
+                if not self.threaded:
+                    rep.pump()
+                ticket.wait(timeout)
+                swapped += 1
+            finally:
+                with self._lock:
+                    self._paused.discard(rep.id)
+                self._dispatch()
+        return swapped
+
+    def pump(self) -> int:
+        """Non-threaded mode: one deterministic scheduling round on the
+        calling thread — dispatch the backlog, then let every replica
+        process its inbox. Returns completed request count."""
+        if self.threaded:
+            raise RuntimeError("pump() is for threaded=False routers; "
+                               "threaded replicas run continuously")
+        self._dispatch()
+        return sum(rep.pump() for rep in self._replicas)
+
+    def run_until_idle(self, max_pumps: int = 100_000) -> int:
+        """Non-threaded mode: pump until nothing is queued or in flight."""
+        total = 0
+        for _ in range(max_pumps):
+            if not self.pending:
+                return total
+            total += self.pump()
+        raise RuntimeError(f"router not idle after {max_pumps} pumps "
+                           f"({self.pending} pending)")
+
+    def shutdown(self, *, drain: bool = True, timeout: float = 60.0) -> None:
+        """Stop the replica workers (after serving the backlog unless
+        ``drain=False``; shed-but-unserved work raises nothing — accepted
+        requests are always completed first)."""
+        if drain:
+            if self.threaded:
+                deadline = time.monotonic() + timeout
+                while self.pending:
+                    self._dispatch()
+                    if time.monotonic() > deadline:
+                        raise TimeoutError(
+                            f"{self.pending} requests still pending")
+                    time.sleep(0.001)
+            else:
+                self.run_until_idle()
+        for rep in self._replicas:
+            rep.stop(timeout)
+
+    # ------------------------------------------------------------ accounting
+    @property
+    def pending(self) -> int:
+        """Undispatched + in-flight request count across the fleet."""
+        with self._lock:
+            queued = len(self._heap)
+        return queued + sum(rep.load for rep in self._replicas)
+
+    @property
+    def n_queued(self) -> int:
+        with self._lock:
+            return len(self._heap)
+
+    def counters(self) -> dict:
+        """Per-class admission ledger: submitted = completed + rejected +
+        pending (the zero-drop bookkeeping the tests pin)."""
+        with self._lock:
+            return {c.name: {"submitted": self._submitted[c.name],
+                             "rejected": self._rejected[c.name],
+                             "completed": self._completed[c.name]}
+                    for c in self.classes}
+
+    def stats(self, cls: RequestClass | str | None = None) -> dict:
+        """Per-class latency percentiles (``serve/slots.py::latency_stats``
+        over the retained finished history) + admission counters +
+        ``deadline_miss_frac`` for deadline-carrying classes."""
+        if cls is None:
+            return {c.name: self.stats(c) for c in self.classes}
+        c = self._resolve_class(cls)
+        with self._lock:
+            reqs = list(self._finished[c.name])
+            rejected = self._rejected[c.name]
+        st = latency_stats(reqs)
+        st["rejected"] = rejected
+        if c.deadline_s is not None and reqs:
+            missed = [r.deadline_missed for r in reqs
+                      if r.deadline_missed is not None]
+            st["deadline_miss_frac"] = (sum(missed) / len(missed)
+                                        if missed else None)
+        return st
+
+    # ------------------------------------------------------------- internals
+    def _resolve_class(self, cls: RequestClass | str) -> RequestClass:
+        if isinstance(cls, RequestClass):
+            if cls.name not in self._by_name:
+                raise ValueError(f"unknown request class {cls.name!r}; "
+                                 f"router classes: {sorted(self._by_name)}")
+            return cls
+        try:
+            return self._by_name[cls]
+        except KeyError:
+            raise ValueError(f"unknown request class {cls!r}; "
+                             f"router classes: {sorted(self._by_name)}")
+
+    def _admit(self, images: list, c: RequestClass) -> list[RouterRequest]:
+        with self._lock:
+            if len(self._heap) + len(images) > self.max_queue:
+                self._rejected[c.name] += len(images)
+                raise RouterOverload(c.name, len(self._heap),
+                                     self.max_queue, len(images))
+            reqs = []
+            now = self.clock()
+            for image in images:
+                req = RouterRequest(rid=self._next_rid, cls=c,
+                                    image=np.asarray(image, np.float32),
+                                    t_submit=now)
+                self._next_rid += 1
+                # (priority, earliest-deadline, arrival seq): strict
+                # priority first, EDF within a rank, FIFO within a class
+                key = (c.priority,
+                       now + c.deadline_s if c.deadline_s is not None
+                       else float("inf"),
+                       self._seq)
+                self._seq += 1
+                heapq.heappush(self._heap, (*key, req))
+                self._submitted[c.name] += 1
+                reqs.append(req)
+        self._dispatch()
+        return reqs
+
+    def _dispatch(self) -> None:
+        """Move backlog to replicas: least-loaded first, capped at
+        ``dispatch_depth`` in-flight per replica, paused replicas skipped
+        (the rolling-swap walk). Safe from any thread."""
+        while True:
+            with self._lock:
+                if not self._heap:
+                    return
+                live = [r for r in self._replicas
+                        if r.id not in self._paused]
+                if not live:
+                    return
+                rep = min(live, key=lambda r: (r.load, r.id))
+                if rep.load >= self._depth:
+                    return
+                *_, req = heapq.heappop(self._heap)
+                req.t_dispatch = self.clock()
+                req.replica_id = rep.id
+            rep.enqueue(req)            # replica lock; never inside ours
+
+    def _on_done(self, rep: EngineReplica, req: RouterRequest,
+                 logits: np.ndarray, epoch: int) -> None:
+        """Replica completion callback (runs on the replica's thread)."""
+        req.logits = logits
+        req.epoch = epoch
+        req.image = None
+        req.t_done = self.clock()
+        req.done = True
+        with self._lock:
+            self._completed[req.cls.name] += 1
+            self._finished[req.cls.name].append(req)
+        req._event.set()
+        self._dispatch()                # a slot's worth of capacity freed
+
+    def _drain_replica(self, rep: EngineReplica, timeout: float) -> None:
+        if not self.threaded:
+            guard = 0
+            while rep.load > 0:
+                rep.pump()
+                guard += 1
+                if guard > 100_000:
+                    raise RuntimeError(f"replica {rep.id} will not drain")
+            return
+        deadline = time.monotonic() + timeout
+        while rep.load > 0:
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"replica {rep.id} did not drain within {timeout}s "
+                    f"({rep.load} in flight)")
+            time.sleep(0.0005)
+
+
+def drive_mixed_poisson(router: Router, images: np.ndarray, rate_hz: float,
+                        *, mix: dict[str, float] | None = None,
+                        seed: int = 0, swap_to=None,
+                        swap_at_frac: float = 0.5) -> dict:
+    """Offer a mixed-class Poisson stream to the router (the fleet-tier
+    sibling of ``serve/bcnn_engine.py::drive_poisson``).
+
+    Arrival gaps are i.i.d. exponential with mean ``1/rate_hz``; each
+    arrival is assigned a traffic class by the ``mix`` weights (default:
+    uniform over the router's classes). If ``swap_to`` is given, a rolling
+    weight swap of the whole fleet is started when ``swap_at_frac`` of the
+    arrivals are in — on a threaded router it runs concurrently with the
+    traffic (the zero-drop demo), on a pump-mode router inline.
+
+    Returns per-class stats scoped to THIS drive's requests:
+    ``{"stats": {class: latency_stats + n_rejected}, "results",
+    "requests", "offered_hz", "n_offered", "n_accepted", "n_rejected",
+    "epochs"}``.
+    ``epochs`` maps weight epoch → requests served by it (both non-zero
+    across a mid-drive swap proves traffic spanned the update).
+    """
+    if rate_hz <= 0:
+        raise ValueError(f"rate_hz must be > 0, got {rate_hz}")
+    rng = np.random.default_rng(seed)
+    names = (sorted(mix) if mix is not None
+             else [c.name for c in router.classes])
+    weights = np.array([mix[n] for n in names] if mix is not None
+                       else [1.0] * len(names), np.float64)
+    if (weights < 0).any() or weights.sum() <= 0:
+        raise ValueError(f"bad mix weights {mix}")
+    n = len(images)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, size=n))
+    chosen = rng.choice(len(names), size=n, p=weights / weights.sum())
+    clock = router.clock
+    real_time = clock is time.perf_counter
+    accepted: list[RouterRequest] = []
+    n_rejected = {nm: 0 for nm in names}
+    swap_thread = None
+    swap_started = False
+    t0 = clock()
+    for i in range(n):
+        if swap_to is not None and not swap_started and i >= swap_at_frac * n:
+            swap_started = True
+            if router.threaded:
+                swap_thread = threading.Thread(
+                    target=router.rolling_swap, args=(swap_to,), daemon=True)
+                swap_thread.start()
+            else:
+                router.rolling_swap(swap_to)
+        while arrivals[i] > clock() - t0:
+            if not router.threaded and router.pending:
+                router.pump()           # serve while "waiting"
+            elif real_time:
+                time.sleep(min(arrivals[i] - (clock() - t0), 0.05))
+        try:
+            accepted.append(router.submit(images[i], cls=names[chosen[i]]))
+        except RouterOverload:
+            n_rejected[names[chosen[i]]] += 1
+    if swap_thread is not None:
+        swap_thread.join()
+    if router.threaded:
+        for r in accepted:
+            r.wait(timeout=120.0)
+    else:
+        router.run_until_idle()
+    epochs: dict[int, int] = {}
+    for r in accepted:
+        epochs[r.epoch] = epochs.get(r.epoch, 0) + 1
+    stats = {}
+    for nm in names:
+        st = latency_stats([r for r in accepted if r.cls.name == nm])
+        st["n_rejected"] = n_rejected[nm]
+        stats[nm] = st
+    return {"results": {r.rid: r.logits for r in accepted},
+            "requests": accepted,
+            "stats": stats, "offered_hz": float(rate_hz),
+            "n_offered": n, "n_accepted": len(accepted),
+            "n_rejected": int(sum(n_rejected.values())), "epochs": epochs}

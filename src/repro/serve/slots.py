@@ -45,18 +45,26 @@ class Request:
     frontend: Any = None            # e.g. audio frames / patch embeds
     out: list = field(default_factory=list)
     done: bool = False
-    t_submit: float = 0.0
-    t_admit: float = 0.0
-    t_done: float = 0.0
+    t_submit: float | None = None
+    t_admit: float | None = None
+    t_done: float | None = None
 
     @property
-    def latency(self) -> float:
-        """End-to-end seconds: submission to completion (queue + service)."""
+    def latency(self) -> float | None:
+        """End-to-end seconds: submission to completion (queue + service).
+        ``None`` until both stamps exist — a queued or in-flight request has
+        no latency yet (the stamps used to default to 0.0, so an unfinished
+        request silently reported a negative wall-clock offset)."""
+        if self.t_done is None or self.t_submit is None:
+            return None
         return self.t_done - self.t_submit
 
     @property
-    def queue_wait(self) -> float:
-        """Seconds spent waiting for a free slot before admission."""
+    def queue_wait(self) -> float | None:
+        """Seconds spent waiting for a free slot before admission, or
+        ``None`` while the request is still queued (not yet admitted)."""
+        if self.t_admit is None or self.t_submit is None:
+            return None
         return self.t_admit - self.t_submit
 
 
@@ -85,9 +93,18 @@ class SlotScheduler:
         self.n_slots = n_slots
         self.slots: list[Request | None] = [None] * n_slots
         self.finished: deque[Request] = deque(maxlen=history)
-        self._queue: list[Request] = []
+        # deque, not list: admission pops from the head, and the deep
+        # backlogs a fleet router builds up made list.pop(0) O(n²)
+        self._queue: deque[Request] = deque()
         self._next_rid = 0
         self._clock = clock
+
+    @property
+    def clock(self) -> Callable[[], float]:
+        """The scheduler's time source — drive loops must stamp arrivals
+        with the SAME clock the latency stamps use (``drive_poisson``
+        desynchronized from deterministic-clock tests before it did)."""
+        return self._clock
 
     # ------------------------------------------------------------------ api
     def submit(self, payload, *, max_new: int = 1, frontend=None) -> int:
@@ -107,7 +124,7 @@ class SlotScheduler:
         admitted: list[tuple[int, Request]] = []
         for i, slot in enumerate(self.slots):
             if slot is None and self._queue:
-                req = self._queue.pop(0)
+                req = self._queue.popleft()
                 req.t_admit = self._clock()
                 self.slots[i] = req
                 admitted.append((i, req))
@@ -160,8 +177,13 @@ def latency_stats(requests: Iterable[Request],
     resolution) carries no rate information, so ``throughput`` is ``None``
     there — never ``inf``/``nan``, which are not JSON and broke the
     ``benchmarks/fig7.py --json`` artifact. Empty input → ``{"n": 0}``.
+
+    Only fully stamped requests contribute: an unfinished request's
+    ``latency``/``queue_wait`` are ``None`` (not a number), so queued or
+    in-flight entries are filtered out rather than skewing the percentiles.
     """
-    reqs = [r for r in requests if r.done]
+    reqs = [r for r in requests
+            if r.done and r.latency is not None and r.queue_wait is not None]
     if not reqs:
         return {"n": 0}
     lat = np.array([r.latency for r in reqs], np.float64)

@@ -1,8 +1,10 @@
 """benchmarks/fig7.py artifact schema: every mode's result dict is
 JSON-serializable and embeds the deployment-plan metadata
 (shards / stages / micro-batch), so a dumped curve is reproducible from
-the artifact alone — the `--json` contract the offline/online/pipeline
-sweeps promise. Runs tiny parameterizations of the real curve functions
+the artifact alone — the `--json` contract the offline/online/pipeline/
+router sweeps promise — and the checked-in per-PR perf record
+(`BENCH_<n>.json`) carries the same plan metadata + compile contracts.
+Runs tiny parameterizations of the real curve functions
 (this process has 1 device, so the offline sweep also exercises the
 explicit ``skipped`` reporting for unplaceable shard counts)."""
 import importlib.util
@@ -70,6 +72,46 @@ def test_pipeline_schema(fig7):
     assert PLAN_KEYS <= st["plan"].keys()
     assert st["plan"]["n_stages"] == st["n_stages"] == 2
     assert st["step_compilations"] == 1
+
+
+@pytest.mark.slow
+def test_router_schema(fig7):
+    res = _roundtrip(fig7, fig7.router_curve(
+        n_replicas=2, n_slots=2, n_requests=4, load_fracs=(0.5,), reps=1))
+    assert PLAN_KEYS <= res["plan"].keys()
+    assert res["plan"]["n_replicas"] == res["n_replicas"] == 2
+    assert res["plan"]["n_slots"] == res["n_slots"] == 2
+    assert res["replica_compilations"] == [1, 1]    # one jit PER replica
+    load = res["load_sweep"]
+    assert len(load["offered_hz"]) == len(load["per_class"]) == 1
+    assert set(res["mix"]) <= set(load["per_class"][0])
+    served = sum(st["n"] for st in load["per_class"][0].values())
+    assert served + load["n_rejected"][0] == 4      # admission ledger closes
+
+
+def test_bench_record_schema():
+    """The checked-in per-PR perf record (BENCH_<n>.json, written by
+    benchmarks/gen_bench_record.py — ROADMAP item 4). Validates structure
+    + the embedded zero-recompile contracts, never absolute wall-clock
+    (records are machine-relative)."""
+    records = sorted(ROOT.glob("BENCH_*.json"))
+    assert records, "no BENCH_<n>.json perf record checked in"
+    for path in records:
+        rec = json.loads(path.read_text())
+        assert {"record", "schema_version", "online", "offline",
+                "router"} <= rec.keys(), path.name
+        on = rec["online"]
+        assert PLAN_KEYS <= on["plan"].keys()
+        assert on["step_compilations"] == 1
+        assert on["capacity_hz"] > 0 and on["occupancy_spread"] >= 1.0
+        for c in rec["offline"]["curves"]:
+            assert PLAN_KEYS <= c["plan"].keys()
+            assert c["compilations"] == 1 and c["peak_img_per_s"] > 0
+        rt = rec["router"]
+        assert PLAN_KEYS <= rt["plan"].keys()
+        assert all(n == 1 for n in rt["replica_compilations"])
+        assert len(rt["offered_hz"]) == len(rt["per_class_p99_ms"]) \
+            == len(rt["n_rejected"])
 
 
 def test_paper_curves_jsonable(fig7):

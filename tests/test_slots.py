@@ -115,6 +115,43 @@ def test_invalid_n_slots():
         SlotScheduler(0)
 
 
+def test_unfinished_request_latency_is_none():
+    """Regression: ``latency``/``queue_wait`` on a not-yet-stamped request
+    used to return negative nonsense (stamps defaulted to 0.0); they are
+    ``None`` now, and ``latency_stats`` filters such requests out."""
+    s = SlotScheduler(1, clock=make_clock(start=100.0))
+    s.submit("a")
+    (queued,) = s._queue
+    assert queued.latency is None and queued.queue_wait is None
+    s.admit()
+    (slot, inflight), = s.occupied()
+    assert inflight.latency is None            # admitted, not done
+    assert inflight.queue_wait is not None     # admission IS stamped
+    # an unstamped request mixed into stats must not skew the percentiles
+    done = Request(rid=9, payload=None, done=True,
+                   t_submit=0.0, t_admit=1.0, t_done=2.0)
+    st = latency_stats([done, inflight, Request(rid=10, payload=None)])
+    assert st["n"] == 1 and st["p50"] == pytest.approx(2.0)
+
+
+def test_backlog_scale_admission():
+    """Regression: the admission queue was a plain list drained with
+    ``pop(0)`` — O(n²) under the deep backlogs a fleet router builds.
+    30k queued requests through one slot must drain in linear-ish time
+    (the quadratic version shifts ~450M list elements here)."""
+    import time as _time
+    n = 30_000
+    s = SlotScheduler(1, clock=make_clock())
+    t0 = _time.perf_counter()
+    for i in range(n):
+        s.submit(i)
+    while s.any_active:
+        s.admit()
+        s.complete(0)
+    assert _time.perf_counter() - t0 < 5.0
+    assert s.n_queued == 0 and s.n_occupied == 0
+
+
 def test_finished_history_is_bounded():
     """A long-running service must not retain every request ever served."""
     s = SlotScheduler(1, clock=make_clock(), history=3)

@@ -44,6 +44,8 @@ DEFAULT_FILES = [
     "src/repro/serve/slots.py",
     "src/repro/serve/engine.py",
     "src/repro/serve/bcnn_engine.py",
+    "src/repro/serve/router.py",
+    "src/repro/serve/replica.py",
     "src/repro/parallel/pipeline.py",
     "src/repro/parallel/bcnn_pipeline.py",
     "src/repro/parallel/bcnn_data_parallel.py",
