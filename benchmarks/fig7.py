@@ -209,7 +209,9 @@ def online_curve(n_slots: int = pc.SERVE_N_SLOTS, n_requests: int = 24,
             "occupancy_sweep": occ, "load_sweep": load,
             "conv_strategy": conv_strategy,
             "plan": {"data_shards": 1, "n_stages": 1, "micro_batch": None,
-                     "n_slots": n_slots}}
+                     "n_slots": n_slots, "conv_fusion": pc.CONV_FUSION,
+                     "fused_groups": [[list(g) for g in
+                                       bcnn.plan_layer_groups()]]}}
 
 
 def run_online(verbose: bool = True, **kw) -> dict:
@@ -311,7 +313,10 @@ def router_curve(n_replicas: int = pc.FIG7_ROUTER_REPLICAS,
             "load_sweep": load, "replica_compilations": replica_compiles,
             "conv_strategy": conv_strategy,
             "plan": {"data_shards": 1, "n_stages": 1, "micro_batch": None,
-                     "n_replicas": n_replicas, "n_slots": n_slots}}
+                     "n_replicas": n_replicas, "n_slots": n_slots,
+                     "conv_fusion": pc.CONV_FUSION,
+                     "fused_groups": [[list(g) for g in
+                                       bcnn.plan_layer_groups()]]}}
 
 
 def run_router(verbose: bool = True, **kw) -> dict:
@@ -399,7 +404,12 @@ def pipeline_curve(stage_counts=pc.FIG7_PIPELINE_STAGE_COUNTS,
         out["stages"].append({
             "n_stages": s,
             "plan": {"data_shards": 1, "n_stages": s,
-                     "micro_batch": micro_batch},
+                     "micro_batch": micro_batch,
+                     "conv_fusion": pc.CONV_FUSION,
+                     "fused_groups": [[list(g) for g in
+                                       bcnn.plan_layer_groups(
+                                           plan.bounds[i], plan.bounds[i + 1])]
+                                      for i in range(s)]},
             "bounds": list(plan.bounds),
             "stage_layers": [" + ".join(plan.stage_layers(i))
                              for i in range(s)],
@@ -533,7 +543,10 @@ def run_offline(verbose: bool = True, **kw) -> dict:
 def run(verbose: bool = True, measure: bool = True) -> dict:
     pa = paper_curves()
     res = {"paper": pa,
-           "plan": {"data_shards": 1, "n_stages": 1, "micro_batch": None}}
+           "plan": {"data_shards": 1, "n_stages": 1, "micro_batch": None,
+                    "conv_fusion": pc.CONV_FUSION,
+                    "fused_groups": [[list(g) for g in
+                                      bcnn.plan_layer_groups()]]}}
     if verbose:
         print("paper analytic (XNOR GPU kernel vs our FPGA config):")
         print(f"{'batch':>6s} {'FPGA FPS':>9s} {'GPU FPS':>9s} "

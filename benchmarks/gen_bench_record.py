@@ -31,7 +31,9 @@ SCHEMA_VERSION = 1
 
 
 def build_record(pr: int, *, fast: bool = False) -> dict:
-    from benchmarks import fig7
+    from benchmarks import fig7, kernels
+    from repro.configs import bcnn_cifar10 as pc
+    from repro.core import bcnn
 
     n_req = 12 if fast else 24
     reps = 1 if fast else 2
@@ -40,6 +42,7 @@ def build_record(pr: int, *, fast: bool = False) -> dict:
     occ = online["occupancy_sweep"]
     offline = fig7.offline_curve(reps=reps)
     router = fig7.router_curve(n_requests=n_req, reps=reps)
+    fused_rows = kernels.fused_pair_rows(measure=True, reps=reps)
 
     return {
         "record": pr,
@@ -57,10 +60,21 @@ def build_record(pr: int, *, fast: bool = False) -> dict:
             "n_stages": offline["n_stages"],
             "micro_batch": offline["micro_batch"],
             "curves": [{"plan": {k: c["plan"][k] for k in
-                                 ("data_shards", "n_stages", "micro_batch")},
+                                 ("data_shards", "n_stages", "micro_batch",
+                                  "conv_fusion", "fused_groups")},
                         "peak_img_per_s": max(c["img_per_s"]),
                         "compilations": c["compilations"]}
                        for c in offline["curves"]],
+        },
+        # cross-layer conv fusion (kernels/xnor_conv_fused.py): the plan the
+        # fused forward uses when enabled, plus the per-pair modeled boundary
+        # HBM bytes (unfused must be strictly greater) and fused-vs-sequential
+        # wall-clock on the XLA reference lowering
+        "fused": {
+            "conv_fusion_default": pc.CONV_FUSION,
+            "fused_groups": [list(g) for g in
+                             bcnn.plan_layer_groups(conv_fusion=True)],
+            "pairs": fused_rows,
         },
         "router": {
             "plan": router["plan"],

@@ -21,6 +21,14 @@ N_CLASSES = 10
 # All BCNN conv layers have 32-aligned channels, so "auto" → direct.
 from repro.core.bconv import DEFAULT_CONV_STRATEGY as CONV_STRATEGY  # noqa: E402,F401
 
+# Cross-layer conv fusion (kernels/xnor_conv_fused.py, planned by
+# core/bcnn.py::plan_layer_groups): fuse the Table 2 same-resolution conv
+# pairs (CONV-3/4, CONV-5/6) into one megakernel whose intermediate bit map
+# never touches HBM. Bit-exact with the unfused fold; opt-in by default —
+# flip with `launch/serve_bcnn.py --conv-fusion` or the per-forward
+# ``conv_fusion=`` argument.
+from repro.core.bconv import DEFAULT_CONV_FUSION as CONV_FUSION  # noqa: E402,F401
+
 # Training defaults (train/bcnn_train.py, launch/train_bcnn.py): the
 # Courbariaux/Bengio recipe's CPU-scale operating point — ~2 min wall for
 # the full 300 steps, --steps 60 for a fast check — and the step-atomic

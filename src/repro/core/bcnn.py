@@ -223,20 +223,79 @@ def apply_packed_layer(packed: BCNNPacked, idx: int, h: jnp.ndarray, *,
     raise ValueError(f"layer index {idx} out of range 0..{N_LAYERS - 1}")
 
 
+def plan_layer_groups(start: int = 0, stop: int = N_LAYERS, *,
+                      conv_fusion: bool | None = None
+                      ) -> tuple[tuple[int, ...], ...]:
+    """Partition layers [start, stop) into fused execution groups.
+
+    With ``conv_fusion`` off (None → ``bconv.DEFAULT_CONV_FUSION``) every
+    group is a singleton — the classic one-layer-at-a-time fold. With it on,
+    consecutive binary conv layers running at the SAME spatial resolution —
+    the first member has no trailing max-pool — pair into one fused
+    megakernel call (``kernels/xnor_conv_fused.py``). Table 2 yields exactly
+    the boundary-dominated pairs: CONV-3/CONV-4 (16×16 maps, eliminating the
+    16·16·256 bit-map boundary) and CONV-5/CONV-6 (8×8 maps, eliminating
+    8·8·512). Max-pool boundaries — where the resolution drops — are never
+    fused across (a pooling layer can only *end* a group, its pool running
+    as the kernel epilogue), and a group never crosses [start, stop): the
+    stage-cut contract of ``parallel/bcnn_pipeline.py::PipelinedForward``.
+
+    Returns a tuple of index tuples that partitions ``range(start, stop)``
+    in order; every group is a singleton or a fusible (i, i+1) pair.
+    """
+    fusion = (bconv.DEFAULT_CONV_FUSION if conv_fusion is None
+              else bool(conv_fusion))
+    groups = []
+    i = start
+    while i < stop:
+        if (fusion and 1 <= i < 5 and i + 1 < stop
+                and not CONV_SPECS[i][2]):
+            groups.append((i, i + 1))
+            i += 2
+        else:
+            groups.append((i,))
+            i += 1
+    return tuple(groups)
+
+
+def apply_packed_group(packed: BCNNPacked, group: tuple[int, ...],
+                       h: jnp.ndarray, *, path: str = "mxu",
+                       conv_strategy: str | None = None) -> jnp.ndarray:
+    """Apply ONE ``plan_layer_groups`` group of the packed forward.
+
+    Singleton groups defer to ``apply_packed_layer``; (i, i+1) pairs run the
+    fused megakernel via ``bconv.apply_packed_pair`` — bit-exact with the
+    two-layer sequential fold, but the intermediate bit map never leaves
+    VMEM. ``conv_strategy`` only shapes unfused layers (the fused kernel is
+    its own dataflow).
+    """
+    if len(group) == 1:
+        return apply_packed_layer(packed, group[0], h, path=path,
+                                  conv_strategy=conv_strategy)
+    i, j = group
+    if j != i + 1 or not 1 <= i < j <= 5:
+        raise ValueError(f"not a fusible binary-conv pair: {group}")
+    return bconv.apply_packed_pair(packed.convs[i - 1], packed.convs[j - 1],
+                                   h, maxpool_b=CONV_SPECS[j][2], path=path)
+
+
 def forward_packed(packed: BCNNPacked, x01: jnp.ndarray,
                    path: str = "mxu",
-                   conv_strategy: str | None = None) -> jnp.ndarray:
+                   conv_strategy: str | None = None,
+                   conv_fusion: bool | None = None) -> jnp.ndarray:
     """Deployment forward: bit feature maps all the way (paper Fig. 3).
 
     ``conv_strategy``: "direct" | "im2col" | "auto"/None — the binary-conv
     dataflow (see core/bconv.py); configs/bcnn_cifar10.py re-exports the
-    default. Not jit'd at the top level: the packed artifacts carry static
-    ints (k) that must stay Python values; each XNOR kernel call is jit'd
-    internally.
+    default. ``conv_fusion``: fuse same-resolution conv pairs into the
+    cross-layer megakernel (None → ``bconv.DEFAULT_CONV_FUSION``); bit-exact
+    either way. Not jit'd at the top level: the packed artifacts carry
+    static ints (k) that must stay Python values; each XNOR kernel call is
+    jit'd internally.
     """
     h = x01
-    for idx in range(N_LAYERS):
-        h = apply_packed_layer(packed, idx, h, path=path,
+    for group in plan_layer_groups(conv_fusion=conv_fusion):
+        h = apply_packed_group(packed, group, h, path=path,
                                conv_strategy=conv_strategy)
     return h
 
@@ -317,14 +376,16 @@ class PackedForward:
     """
 
     def __init__(self, packed: BCNNPacked, *, path: str = "mxu",
-                 conv_strategy: str | None = None):
+                 conv_strategy: str | None = None,
+                 conv_fusion: bool | None = None):
         self._packed = packed
         arrays, rebuild = split_packed(packed)
         self._arrays = arrays
 
         def fwd(arrs, x01: jnp.ndarray) -> jnp.ndarray:
             return forward_packed(rebuild(arrs), x01, path=path,
-                                  conv_strategy=conv_strategy)
+                                  conv_strategy=conv_strategy,
+                                  conv_fusion=conv_fusion)
 
         self._jit = jax.jit(fwd)
 
@@ -349,7 +410,8 @@ class PackedForward:
 
 
 def make_packed_forward(packed: BCNNPacked, *, path: str = "mxu",
-                        conv_strategy: str | None = None) -> PackedForward:
+                        conv_strategy: str | None = None,
+                        conv_fusion: bool | None = None) -> PackedForward:
     """Close the packed statics over ``forward_packed`` → a ``PackedForward``.
 
     The returned object is a plain ``x01 → logits`` callable with a
@@ -357,9 +419,13 @@ def make_packed_forward(packed: BCNNPacked, *, path: str = "mxu",
     which is the zero-recompile contract the streaming engine
     (``serve/bcnn_engine.py``) relies on — and additionally supports
     ``swap(new_packed)``: zero-recompile weight hot-swap (see
-    ``PackedForward``).
+    ``PackedForward``). ``conv_fusion`` turns on the cross-layer fused
+    megakernel for the planner's same-resolution pairs; the hot-swap and
+    zero-recompile contracts are unchanged (``split_packed`` statics are
+    identical — the fused kernel consumes the same packed arrays).
     """
-    return PackedForward(packed, path=path, conv_strategy=conv_strategy)
+    return PackedForward(packed, path=path, conv_strategy=conv_strategy,
+                         conv_fusion=conv_fusion)
 
 
 def loss_fn(params: BCNNParams, x01: jnp.ndarray, labels: jnp.ndarray):

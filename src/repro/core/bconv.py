@@ -50,6 +50,14 @@ class BConvParams(NamedTuple):
 
 DEFAULT_CONV_STRATEGY = "auto"   # "auto" | "direct" | "im2col"
 
+# Cross-layer conv fusion (kernels/xnor_conv_fused.py): fuse same-resolution
+# binary conv pairs so the intermediate bit map never touches HBM. Opt-in
+# (like the router tier): every deployment forward takes a ``conv_fusion``
+# override and falls back to this default when passed None. Fusion is
+# bit-exact with the sequential fold, so flipping it never changes outputs —
+# only the dataflow. configs/bcnn_cifar10.py re-exports this as CONV_FUSION.
+DEFAULT_CONV_FUSION = False
+
 
 class BConvPacked(NamedTuple):
     w_words: jnp.ndarray    # (O, ceil(FH*FW*I/32)) int32 — im2col layout
@@ -191,6 +199,35 @@ def apply_packed(fp: BConvPacked, a_bits: jnp.ndarray, *,
                                    (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
         out = jnp.where(fp.thr.flip[None, None, None, :], mn, mx)
     return out
+
+
+def apply_packed_pair(fa: BConvPacked, fb: BConvPacked, a_bits: jnp.ndarray,
+                      *, maxpool_b: bool = False,
+                      path: str = "mxu") -> jnp.ndarray:
+    """Fused pair of packed binary convs: conv A → NormBinarize → (VMEM
+    re-pack) → conv B → NormBinarize → optional trailing 2×2 max-pool.
+
+    Bit-exact with ``apply_packed(fa, ...) ; apply_packed(fb, ...,
+    maxpool=maxpool_b)`` for EITHER conv strategy — the fused megakernel is
+    its own (direct-style) dataflow, so the ``strategy`` knob does not apply
+    inside a fused group; it keeps selecting the lowering of unfused layers.
+    Requires the per-position weight layouts and 32-aligned channel counts
+    (the same condition under which "auto" resolves to "direct").
+    """
+    n, h, w, c = a_bits.shape
+    if fa.w_words_hw is None or fb.w_words_hw is None:
+        raise ValueError(
+            "fused conv pair needs the per-position weight layout; these "
+            "BConvPacked predate it — re-fold() the params")
+    oa = fa.w_words_hw.shape[0]
+    if c % bitpack.PACK or oa % bitpack.PACK:
+        raise ValueError(
+            f"fused conv pair needs 32-aligned channels, got C={c}, OA={oa}")
+    return ops.xnor_conv2d_pair(
+        a_bits, fa.w_words_hw, fb.w_words_hw, ka=fa.k, kb=fb.k,
+        fha=fa.fh, fwa=fa.fw, fhb=fb.fh, fwb=fb.fw, pool_b=maxpool_b,
+        thr_a_c=fa.thr.c, thr_a_flip=fa.thr.flip,
+        thr_b_c=fb.thr.c, thr_b_flip=fb.thr.flip, path=path)
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class BNParams(NamedTuple):
@@ -43,17 +44,31 @@ class NBThreshold(NamedTuple):
 
 
 def fold_threshold(bn: BNParams, cnum: int, rounded: bool = True) -> NBThreshold:
-    """Fold BN params + eq. 6 compensation into the eq. 8 threshold c_l."""
-    denom = jnp.where(jnp.abs(bn.gamma) < 1e-12, 1e-12, bn.gamma)
-    c = (cnum + bn.mean - bn.beta * jnp.sqrt(bn.var + bn.eps) / denom) * 0.5
+    """Fold BN params + eq. 6 compensation into the eq. 8 threshold c_l.
+
+    Folding is an offline deployment-build step (``bconv.fold`` /
+    ``blinear.fold`` run eagerly, never under jit), so the fold happens in
+    host float64: the exact c_l can sit within a float32 ulp of an integer
+    (ulp(1152) ≈ 6e-5), and a float32 fold then snaps it *onto* the integer,
+    making the ceil/floor below a no-op and shifting the threshold by one.
+    Every y_l landing exactly on that boundary flips vs. the BN oracle.
+    """
+    mean = np.asarray(bn.mean, np.float64)
+    var = np.asarray(bn.var, np.float64)
+    gamma = np.asarray(bn.gamma, np.float64)
+    beta = np.asarray(bn.beta, np.float64)
+    denom = np.where(np.abs(gamma) < 1e-12, 1e-12, gamma)
+    c = (cnum + mean - beta * np.sqrt(var + float(bn.eps)) / denom) * 0.5
     if rounded:
         # paper: "rounded to the nearest integer for hardware implementation".
         # We round so the integer compare stays *bit-exact* vs. the real BN:
         #   γ>0:  y_l >= c      ⇔ y_l >= ceil(c)        (y_l integer)
         #   γ<0:  y_l <= c      ⇔ y_l <  floor(c)+1 = ~(y_l >= floor(c)+1)
         # (norm_binarize implements the flip as ~(y_l >= c)).
-        c = jnp.where(bn.gamma >= 0, jnp.ceil(c), jnp.floor(c) + 1.0)
-    return NBThreshold(c=c, flip=bn.gamma < 0)
+        c = np.where(gamma >= 0, np.ceil(c), np.floor(c) + 1.0)
+    # rounded thresholds are integers well below 2**24 → exact in float32
+    return NBThreshold(c=jnp.asarray(c, jnp.float32),
+                       flip=jnp.asarray(gamma < 0))
 
 
 def bn_denom(var: jnp.ndarray, eps: float) -> jnp.ndarray:

@@ -182,6 +182,90 @@ def xnor_conv2d(a_bits: jnp.ndarray, w_words: jnp.ndarray, *, k: int,
     return y
 
 
+@functools.partial(jax.jit, static_argnames=("ka", "kb", "fha", "fwa", "fhb",
+                                             "fwb", "pool_b", "path",
+                                             "interpret"))
+def xnor_conv2d_pair(a_bits: jnp.ndarray, wa_words: jnp.ndarray,
+                     wb_words: jnp.ndarray, *, ka: int, kb: int,
+                     fha: int, fwa: int, fhb: int, fwb: int,
+                     pool_b: bool = False,
+                     thr_a_c: jnp.ndarray, thr_a_flip: jnp.ndarray,
+                     thr_b_c: jnp.ndarray, thr_b_flip: jnp.ndarray,
+                     path: str = "mxu",
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """Fused pair of same-resolution binary convs (kernels/xnor_conv_fused.py).
+
+    Computes conv A → eq. 8 NormBinarize → conv B → NormBinarize (→ optional
+    trailing 2×2 max-pool when ``pool_b``) in ONE Pallas kernel: the
+    intermediate packed bit map stays in VMEM and never touches HBM. Both
+    convs are stride-1 SAME with odd filters; padding is in the {1,0} bit
+    domain (pad bit 0 = −1), identical to two ``xnor_conv2d`` calls.
+
+    a_bits:   (N, H, W, C) {0,1} int8, C % 32 == 0
+    wa_words: (OA, FHa·FWa·C/32) int32 per-position packed (OA % 32 == 0)
+    wb_words: (OB, FHb·FWb·OA/32) int32 per-position packed
+    ka/kb:    true reduction lengths (FH·FW·C — the paper's cnum)
+    Thresholds/flips are the ``fold_threshold`` outputs for each layer;
+    both epilogues always binarize (the planner only fuses interior binary
+    conv layers). Returns (N, HO, WO, OB) {0,1} int8, HO = H//2 when
+    ``pool_b`` else H. ``path``: "vpu" | "mxu" | "xla" (the two-call
+    composition — bit-identical, no Pallas).
+    """
+    from repro.kernels import xnor_conv_fused as kfused
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, h, w, c = a_bits.shape
+    oa, la = wa_words.shape
+    ob, lb = wb_words.shape
+    assert fha % 2 == 1 and fwa % 2 == 1 and fhb % 2 == 1 and fwb % 2 == 1, \
+        "fused pair supports odd SAME filters only"
+
+    if path == "xla":
+        bits1 = xnor_conv2d(a_bits, wa_words, k=ka, fh=fha, fw=fwa,
+                            thr_c=thr_a_c, thr_flip=thr_a_flip, path="xla")
+        out = xnor_conv2d(bits1, wb_words, k=kb, fh=fhb, fw=fwb,
+                          thr_c=thr_b_c, thr_flip=thr_b_flip, path="xla")
+        if pool_b:
+            mx = jax.lax.reduce_window(out, jnp.int8(0), jax.lax.max,
+                                       (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+            mn = jax.lax.reduce_window(out, jnp.int8(1), jax.lax.min,
+                                       (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+            out = jnp.where(thr_b_flip[None, None, None, :] != 0, mn, mx)
+        return out
+
+    assert c % bitpack.PACK == 0 and oa % bitpack.PACK == 0, (c, oa)
+    pf = 2 if pool_b else 1
+    assert h % pf == 0 and w % pf == 0, (h, w, pf)
+    ho, wo = h // pf, w // pf           # pooled output extent
+    th, tw = kfused.pick_tiles(ho, wo, pf=pf, fhb=fhb, fwb=fwb, oa=oa, la=la)
+    ho_p = -(-ho // th) * th
+    wo_p = -(-wo // tw) * tw
+    pha, pwa = fha // 2, fwa // 2
+    phb, pwb = fhb // 2, fwb // 2
+    # pack activation channels, then pad so every tile's gather span exists:
+    # top/left by both convs' SAME pads, bottom/right up to the tile grid
+    # (extra rows/cols are zero words = −1 bits; out-of-map halo positions
+    # are re-masked inside the kernel before re-packing)
+    aw = bitpack.pack_bits(a_bits)
+    hp_need = pf * ho_p + fha + fhb - 2
+    wp_need = pf * wo_p + fwa + fwb - 2
+    aw = jnp.pad(aw, ((0, 0),
+                      (pha + phb, max(0, hp_need - h - pha - phb)),
+                      (pwa + pwb, max(0, wp_need - w - pwa - pwb)),
+                      (0, 0)))
+    ca = thr_a_c.astype(jnp.float32).reshape(1, -1)
+    fa = thr_a_flip.astype(jnp.int32).reshape(1, -1)
+    cb = thr_b_c.astype(jnp.float32).reshape(1, -1)
+    fb = thr_b_flip.astype(jnp.int32).reshape(1, -1)
+    fn = (kfused.xnor_conv2d_pair_vpu if path == "vpu"
+          else kfused.xnor_conv2d_pair_mxu)
+    y = fn(aw, wa_words, wb_words, ka=ka, kb=kb, fha=fha, fwa=fwa, fhb=fhb,
+           fwb=fwb, pf=pf, thr_a_c=ca, thr_a_flip=fa, thr_b_c=cb,
+           thr_b_flip=fb, h_img=h, w_img=w, ho=ho_p, wo=wo_p, th=th, tw=tw,
+           interpret=interpret)
+    return y[:, :ho, :wo, :].astype(jnp.int8)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
 def binary_weight_matmul(a: jnp.ndarray, w_words: jnp.ndarray, *, k: int,
                          scale: jnp.ndarray | None = None,

@@ -80,6 +80,7 @@ def serve_fleet(packed, x, args):
     router = Router.from_packed(
         packed, n_replicas=args.replicas, n_slots=args.slots,
         path=args.path, conv_strategy=args.conv_strategy,
+        conv_fusion=args.conv_fusion,
         max_queue=args.max_queue, history=max(4096, args.requests))
     unknown = set(mix) - set(router.class_names)
     if unknown:
@@ -142,6 +143,12 @@ def main(argv=None):
                     help="kernel path (auto: mxu on TPU, xla elsewhere)")
     ap.add_argument("--conv-strategy", default=pc.CONV_STRATEGY,
                     choices=["auto", "direct", "im2col"])
+    ap.add_argument("--conv-fusion", action="store_true",
+                    default=pc.CONV_FUSION,
+                    help="fuse the same-resolution conv pairs (CONV-3/4, "
+                         "CONV-5/6) into the cross-layer Pallas megakernel "
+                         "(kernels/xnor_conv_fused.py) — bit-exact, the "
+                         "intermediate bit map never touches HBM")
     ap.add_argument("--pipeline-stages", type=int, default=pc.PIPELINE_STAGES,
                     help="cut the 9-layer forward into N cost-balanced "
                          "pipeline stages over the local devices "
@@ -200,6 +207,7 @@ def main(argv=None):
                          "(the rolling walk is a fleet-tier operation)")
     eng = BCNNEngine.from_packed(packed, n_slots=args.slots, path=args.path,
                                  conv_strategy=args.conv_strategy,
+                                 conv_fusion=args.conv_fusion,
                                  pipeline_stages=args.pipeline_stages,
                                  pipeline_micro_batch=args.micro_batch,
                                  data_shards=args.data_shards,

@@ -51,7 +51,7 @@ import jax.numpy as jnp
 
 from jax.sharding import PartitionSpec as P
 
-from repro.core import bcnn
+from repro.core import bcnn, bconv
 from repro.launch.mesh import dp_axes, make_data_mesh
 from repro.parallel import sharding
 from repro.parallel.bcnn_pipeline import (PipelinedForward, StagePlan,
@@ -78,16 +78,22 @@ class DeploymentPlan(NamedTuple):
     micro_batch: int
     chunk: int
     stage_plan: StagePlan
+    conv_fusion: bool = False
+    fused_groups: tuple = ()   # per stage: the plan_layer_groups partition
 
     def describe(self) -> dict:
         """JSON-ready plan metadata — embedded in every
         ``benchmarks/fig7.py`` dump so a curve is reproducible from the
-        artifact alone."""
+        artifact alone. ``conv_fusion``/``fused_groups`` record the
+        cross-layer fusion plan (one layer-group partition per stage)."""
         return {"data_shards": self.data_shards,
                 "n_stages": self.n_stages,
                 "micro_batch": self.micro_batch,
                 "chunk": self.chunk,
-                "stage_bounds": list(self.stage_plan.bounds)}
+                "stage_bounds": list(self.stage_plan.bounds),
+                "conv_fusion": bool(self.conv_fusion),
+                "fused_groups": [[list(g) for g in stage]
+                                 for stage in self.fused_groups]}
 
 
 class ShardedForward:
@@ -114,16 +120,25 @@ class ShardedForward:
 
     def __init__(self, packed: bcnn.BCNNPacked, mesh, micro_batch: int, *,
                  n_stages: int = 1, devices: Sequence | None = None,
-                 path: str = "mxu", conv_strategy: str | None = None):
+                 path: str = "mxu", conv_strategy: str | None = None,
+                 conv_fusion: bool | None = None):
         if micro_batch < 1:
             raise ValueError(f"micro_batch must be >= 1, got {micro_batch}")
         self.mesh = mesh
         shards = 1
         for a in dp_axes(mesh):
             shards *= mesh.shape[a]
+        stage_plan = plan_bcnn_stages(n_stages)
         self.plan = DeploymentPlan(
             data_shards=shards, n_stages=n_stages, micro_batch=micro_batch,
-            chunk=shards * micro_batch, stage_plan=plan_bcnn_stages(n_stages))
+            chunk=shards * micro_batch, stage_plan=stage_plan,
+            conv_fusion=(bconv.DEFAULT_CONV_FUSION if conv_fusion is None
+                         else bool(conv_fusion)),
+            fused_groups=tuple(
+                bcnn.plan_layer_groups(stage_plan.bounds[s],
+                                       stage_plan.bounds[s + 1],
+                                       conv_fusion=conv_fusion)
+                for s in range(n_stages)))
         self._n_classes = packed.fc3_w_words.shape[0]
         if devices is None:
             devices = list(mesh.devices.flat)
@@ -142,7 +157,8 @@ class ShardedForward:
 
             def fwd(arrs, x01):
                 return bcnn.forward_packed(rebuild(arrs), x01, path=path,
-                                           conv_strategy=conv_strategy)
+                                           conv_strategy=conv_strategy,
+                                           conv_fusion=conv_fusion)
 
             self._chunk_fn = jax.jit(_shard_map(
                 fwd, mesh=mesh, in_specs=(P(), spec), out_specs=spec))
@@ -157,7 +173,8 @@ class ShardedForward:
                     packed, self.plan.stage_plan,
                     [self.devices[(s * n_stages + j) % len(self.devices)]
                      for j in range(n_stages)],
-                    micro_batch, path=path, conv_strategy=conv_strategy)
+                    micro_batch, path=path, conv_strategy=conv_strategy,
+                    conv_fusion=conv_fusion)
                 for s in range(shards))
 
     @property
@@ -228,7 +245,8 @@ def make_sharded_forward(packed: bcnn.BCNNPacked, mesh=None, *,
                          data_shards: int | None = None,
                          micro_batch: int = 8, n_stages: int = 1,
                          devices=None, path: str = "mxu",
-                         conv_strategy: str | None = None) -> ShardedForward:
+                         conv_strategy: str | None = None,
+                         conv_fusion: bool | None = None) -> ShardedForward:
     """Close packed artifacts over a batch-sharded deployment forward.
 
     The data-parallel counterpart of ``core/bcnn.py::make_packed_forward``
@@ -273,4 +291,5 @@ def make_sharded_forward(packed: bcnn.BCNNPacked, mesh=None, *,
                              f"data_shards={data_shards} requested")
     return ShardedForward(packed, mesh, micro_batch, n_stages=n_stages,
                           devices=devices, path=path,
-                          conv_strategy=conv_strategy)
+                          conv_strategy=conv_strategy,
+                          conv_fusion=conv_fusion)

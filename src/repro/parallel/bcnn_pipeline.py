@@ -170,7 +170,8 @@ def pad_rows(x: jnp.ndarray, n_rows: int) -> jnp.ndarray:
 
 
 def _make_stage_fn(rebuild: Callable, a: int, b: int, *, path: str,
-                   conv_strategy: str | None) -> Callable:
+                   conv_strategy: str | None,
+                   conv_fusion: bool | None = None) -> Callable:
     """Closure applying layers [a, b): unpack → layers → pack, jit-ready.
 
     Statics (layer indices, packed k's, filter sizes) are closed over while
@@ -179,12 +180,19 @@ def _make_stage_fn(rebuild: Callable, a: int, b: int, *, path: str,
     function has a shape-only jit signature — the same contract as
     ``core/bcnn.py::make_packed_forward``, per stage — and a weight swap
     with identical shapes reuses the compiled executable.
+
+    ``conv_fusion`` plans fused conv pairs WITHIN [a, b) only
+    (``core/bcnn.py::plan_layer_groups(a, b, ...)``): a stage cut is a
+    device boundary, so a group never spans one — fusion within a stage,
+    never across it.
     """
+    groups = bcnn.plan_layer_groups(a, b, conv_fusion=conv_fusion)
+
     def stage(arrays, h: jnp.ndarray) -> jnp.ndarray:
         packed = rebuild(arrays)
         h = unpack_boundary(a, h)
-        for idx in range(a, b):
-            h = bcnn.apply_packed_layer(packed, idx, h, path=path,
+        for group in groups:
+            h = bcnn.apply_packed_group(packed, group, h, path=path,
                                         conv_strategy=conv_strategy)
         return pack_boundary(b, h)
     return stage
@@ -213,11 +221,13 @@ class PipelinedForward:
 
     def __init__(self, packed: bcnn.BCNNPacked, plan: StagePlan,
                  devices: Sequence, micro_batch: int, *, path: str,
-                 conv_strategy: str | None):
+                 conv_strategy: str | None,
+                 conv_fusion: bool | None = None):
         if micro_batch < 1:
             raise ValueError(f"micro_batch must be >= 1, got {micro_batch}")
         self.plan = plan
         self.micro_batch = micro_batch
+        self.conv_fusion = conv_fusion
         self._packed = packed
         self._n_classes = packed.fc3_w_words.shape[0]
         # stage s runs on devices[s % len(devices)]: fewer devices than
@@ -229,8 +239,18 @@ class PipelinedForward:
         self._stage_fns = [
             jax.jit(_make_stage_fn(rebuild, plan.bounds[s],
                                    plan.bounds[s + 1], path=path,
-                                   conv_strategy=conv_strategy))
+                                   conv_strategy=conv_strategy,
+                                   conv_fusion=conv_fusion))
             for s in range(plan.n_stages)]
+
+    def fused_groups(self) -> tuple:
+        """The per-stage fusion plans (for benchmark/plan metadata): one
+        ``plan_layer_groups(a, b)`` tuple per stage."""
+        return tuple(
+            bcnn.plan_layer_groups(self.plan.bounds[s],
+                                   self.plan.bounds[s + 1],
+                                   conv_fusion=self.conv_fusion)
+            for s in range(self.n_stages))
 
     def _place_arrays(self, arrays) -> list:
         """One device-resident copy of the weight arrays per stage (the
@@ -315,7 +335,8 @@ class PipelinedForward:
 def make_pipelined_forward(packed: bcnn.BCNNPacked, *, n_stages: int,
                            micro_batch: int = 1, devices=None,
                            path: str = "mxu",
-                           conv_strategy: str | None = None
+                           conv_strategy: str | None = None,
+                           conv_fusion: bool | None = None
                            ) -> PipelinedForward:
     """Close packed artifacts over an N-stage pipelined deployment forward.
 
@@ -335,4 +356,5 @@ def make_pipelined_forward(packed: bcnn.BCNNPacked, *, n_stages: int,
     if devices is None:
         devices = jax.devices()
     return PipelinedForward(packed, plan, devices, micro_batch, path=path,
-                            conv_strategy=conv_strategy)
+                            conv_strategy=conv_strategy,
+                            conv_fusion=conv_fusion)

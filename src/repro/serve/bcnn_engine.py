@@ -110,6 +110,7 @@ class BCNNEngine:
     @classmethod
     def from_packed(cls, packed: bcnn.BCNNPacked, *, n_slots: int = 8,
                     path: str = "auto", conv_strategy: str | None = None,
+                    conv_fusion: bool | None = None,
                     pipeline_stages: int = 1,
                     pipeline_micro_batch: int = 1,
                     pipeline_devices=None,
@@ -137,16 +138,23 @@ class BCNNEngine:
         ``data_shards × data_micro_batch``). Slot streaming for individual
         requests is untouched. ``data_shards=0`` (default) disables the
         bulk path.
+
+        ``conv_fusion`` (None → the ``core/bconv.py`` default) turns on the
+        cross-layer fused conv megakernel inside whichever forward is built
+        — bit-exact, and the ``step_cache_size``/hot-swap contracts are
+        unchanged (the fused kernel consumes the same packed arrays).
         """
         if pipeline_stages > 1:
             from repro.parallel.bcnn_pipeline import make_pipelined_forward
             fwd = make_pipelined_forward(
                 packed, n_stages=pipeline_stages,
                 micro_batch=pipeline_micro_batch, devices=pipeline_devices,
-                path=_resolve_path(path), conv_strategy=conv_strategy)
+                path=_resolve_path(path), conv_strategy=conv_strategy,
+                conv_fusion=conv_fusion)
         else:
             fwd = bcnn.make_packed_forward(packed, path=_resolve_path(path),
-                                           conv_strategy=conv_strategy)
+                                           conv_strategy=conv_strategy,
+                                           conv_fusion=conv_fusion)
         eng = cls(fwd, n_slots=n_slots, **kw)
         eng._n_classes = packed.fc3_w_words.shape[0]
         if data_shards >= 1:
@@ -154,7 +162,8 @@ class BCNNEngine:
             eng._batch_fn = make_sharded_forward(
                 packed, data_shards=data_shards,
                 micro_batch=data_micro_batch, n_stages=pipeline_stages,
-                path=_resolve_path(path), conv_strategy=conv_strategy)
+                path=_resolve_path(path), conv_strategy=conv_strategy,
+                conv_fusion=conv_fusion)
             eng._batch_threshold = (eng._batch_fn.plan.chunk
                                     if batch_threshold is None
                                     else batch_threshold)

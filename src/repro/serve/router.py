@@ -201,6 +201,7 @@ class Router:
     def from_packed(cls, packed, *, n_replicas: int = 2,
                     n_slots: int | None = None, path: str = "auto",
                     conv_strategy: str | None = None,
+                    conv_fusion: bool | None = None,
                     warmup: bool = True,
                     clock: Callable[[], float] = time.perf_counter,
                     history: int = 4096, **router_kw) -> "Router":
@@ -208,12 +209,14 @@ class Router:
         router. Each replica owns its own jit closure (so each compiles
         exactly once: ``step_cache_size == 1`` *per replica*); ``warmup``
         compiles them before any traffic so the first requests don't pay
-        N compilations."""
+        N compilations. ``conv_fusion`` threads to every replica's forward
+        (the cross-layer fused megakernel — bit-exact, same contracts)."""
         if n_replicas < 1:
             raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
         kw = {} if n_slots is None else {"n_slots": n_slots}
         engines = [BCNNEngine.from_packed(packed, path=path,
                                           conv_strategy=conv_strategy,
+                                          conv_fusion=conv_fusion,
                                           clock=clock, history=history, **kw)
                    for _ in range(n_replicas)]
         if warmup:

@@ -16,6 +16,19 @@ import pytest
 ROOT = Path(__file__).resolve().parent.parent
 
 PLAN_KEYS = {"data_shards", "n_stages", "micro_batch"}
+# conv-fusion plan metadata (every live fig7 plan dict carries it; checked-in
+# BENCH_<n>.json records only from the record that introduced it, PR 7)
+FUSION_KEYS = {"conv_fusion", "fused_groups"}
+
+
+def _assert_fusion_plan(plan: dict):
+    assert FUSION_KEYS <= plan.keys()
+    assert isinstance(plan["conv_fusion"], bool)
+    # one group list per pipeline stage; groups are singleton or pair layers
+    assert len(plan["fused_groups"]) == plan["n_stages"]
+    for stage_groups in plan["fused_groups"]:
+        for g in stage_groups:
+            assert 1 <= len(g) <= 2
 
 
 def _load_fig7():
@@ -43,6 +56,7 @@ def test_offline_schema(fig7):
     assert len(res["curves"]) >= 1
     for curve in res["curves"]:
         assert PLAN_KEYS | {"chunk", "stage_bounds"} <= curve["plan"].keys()
+        _assert_fusion_plan(curve["plan"])
         assert len(curve["batch"]) == len(curve["img_per_s"]) == 2
         assert curve["compilations"] == 1
     # this process sees 1 device: the 2-shard point must be reported as
@@ -56,6 +70,7 @@ def test_online_schema(fig7):
     res = _roundtrip(fig7, fig7.online_curve(
         n_slots=2, n_requests=3, load_fracs=(0.5,), reps=1))
     assert PLAN_KEYS <= res["plan"].keys()
+    _assert_fusion_plan(res["plan"])
     assert res["plan"]["n_slots"] == res["n_slots"] == 2
     assert res["step_compilations"] == 1
     occ = res["occupancy_sweep"]
@@ -70,6 +85,7 @@ def test_pipeline_schema(fig7):
     assert len(res["stages"]) == 1
     st = res["stages"][0]
     assert PLAN_KEYS <= st["plan"].keys()
+    _assert_fusion_plan(st["plan"])
     assert st["plan"]["n_stages"] == st["n_stages"] == 2
     assert st["step_compilations"] == 1
 
@@ -79,6 +95,7 @@ def test_router_schema(fig7):
     res = _roundtrip(fig7, fig7.router_curve(
         n_replicas=2, n_slots=2, n_requests=4, load_fracs=(0.5,), reps=1))
     assert PLAN_KEYS <= res["plan"].keys()
+    _assert_fusion_plan(res["plan"])
     assert res["plan"]["n_replicas"] == res["n_replicas"] == 2
     assert res["plan"]["n_slots"] == res["n_slots"] == 2
     assert res["replica_compilations"] == [1, 1]    # one jit PER replica
@@ -112,11 +129,29 @@ def test_bench_record_schema():
         assert all(n == 1 for n in rt["replica_compilations"])
         assert len(rt["offered_hz"]) == len(rt["per_class_p99_ms"]) \
             == len(rt["n_rejected"])
+        # records from the fused-megakernel PR onward carry the fusion
+        # metadata everywhere and the per-pair boundary-traffic claim
+        if rec["record"] >= 7:
+            assert "fused" in rec, path.name
+            _assert_fusion_plan(on["plan"])
+            _assert_fusion_plan(rt["plan"])
+            for c in rec["offline"]["curves"]:
+                assert FUSION_KEYS <= c["plan"].keys()
+            fu = rec["fused"]
+            assert isinstance(fu["conv_fusion_default"], bool)
+            groups = [tuple(g) for g in fu["fused_groups"]]
+            assert sorted(i for g in groups for i in g) == list(range(9))
+            assert any(len(g) == 2 for g in groups)
+            assert fu["pairs"], path.name
+            for pair in fu["pairs"]:
+                assert pair["boundary_bytes_fused"] \
+                    < pair["boundary_bytes_unfused"]
 
 
 def test_paper_curves_jsonable(fig7):
     res = _roundtrip(fig7, fig7.run(verbose=False, measure=False))
     assert PLAN_KEYS <= res["plan"].keys()
+    _assert_fusion_plan(res["plan"])
     assert len(res["paper"]["batch"]) == len(res["paper"]["fpga_fps"])
 
 

@@ -127,6 +127,29 @@ def test_forward_packed_golden_logits(conv_strategy):
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
 
 
+@pytest.mark.parametrize("deployment", ["single", "pipelined", "sharded"])
+def test_forward_golden_logits_fused(deployment):
+    """Cross-layer conv fusion pinned to the SAME golden logits — fusion is
+    bit-exact, so the checked-in tile needs no fused variant — on all three
+    deployment forwards (single-device, stage-pipelined, data-parallel)."""
+    from repro.core import bcnn
+    packed = bcnn.fold_model(bcnn.init(jax.random.PRNGKey(LOGITS_SEED)))
+    if deployment == "single":
+        fwd = bcnn.make_packed_forward(packed, path="xla", conv_fusion=True)
+    elif deployment == "pipelined":
+        from repro.parallel.bcnn_pipeline import make_pipelined_forward
+        fwd = make_pipelined_forward(packed, n_stages=2, micro_batch=1,
+                                     path="xla", conv_fusion=True)
+    else:
+        from repro.parallel.bcnn_data_parallel import make_sharded_forward
+        fwd = make_sharded_forward(packed, data_shards=1, micro_batch=2,
+                                   path="xla", conv_fusion=True)
+    got = np.asarray(fwd(jnp.asarray(_golden_input_tile())))
+    want = np.asarray(LOGITS_GOLD, np.float32)
+    np.testing.assert_array_equal(np.argmax(got, -1), np.argmax(want, -1))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
 def test_binary_weight_matmul_golden():
     a = np.fromfunction(lambda i, j: ((i + 2 * j) % 7) - 3,
                         (2, K_BW)).astype(np.float32)

@@ -112,6 +112,42 @@ def test_apply_packed_layer_matches_eval_layerwise(model_seed, input_seed,
                                        rtol=1e-4, atol=1e-4)
 
 
+@SET_DEPLOY
+@given(st.integers(0, 1), st.integers(0, 2 ** 31 - 1), st.integers(1, 3))
+def test_conv_fusion_parity(model_seed, input_seed, batch):
+    """Cross-layer conv fusion (kernels/xnor_conv_fused.py) is bit-exact:
+    the fused forward equals the unfused fold for randomized model seeds,
+    inputs, and batch sizes — the fusion-parity invariant the megakernel's
+    test tier pins on fixtures, here over the whole sampled space."""
+    _, packed = _bcnn_model(model_seed)
+    x = jnp.asarray(np.random.default_rng(input_seed)
+                    .random((batch, 32, 32, 3)).astype(np.float32))
+    ref = bcnn.forward_packed(packed, x, path="xla", conv_fusion=False)
+    got = bcnn.forward_packed(packed, x, path="xla", conv_fusion=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@SET
+@given(st.integers(0, bcnn.N_LAYERS), st.integers(0, bcnn.N_LAYERS),
+       st.booleans())
+def test_plan_layer_groups_partitions(start, stop, fusion):
+    """The fusion planner partitions any [start, stop) layer window in
+    order; every group is a singleton or an adjacent binary-conv pair whose
+    first member has no max-pool (a pool only ever ends a group), so a
+    group never spans a resolution drop or a stage cut."""
+    start, stop = min(start, stop), max(start, stop)
+    groups = bcnn.plan_layer_groups(start, stop, conv_fusion=fusion)
+    assert [i for g in groups for i in g] == list(range(start, stop))
+    for g in groups:
+        assert len(g) in (1, 2)
+        if len(g) == 2:
+            i, j = g
+            assert j == i + 1 and 1 <= i <= 4
+            assert not bcnn.CONV_SPECS[i][2]
+    if not fusion:
+        assert all(len(g) == 1 for g in groups)
+
+
 # ---------------------------------------------------------------- normbinarize
 
 @SET

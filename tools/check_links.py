@@ -49,6 +49,8 @@ DEFAULT_FILES = [
     "src/repro/parallel/pipeline.py",
     "src/repro/parallel/bcnn_pipeline.py",
     "src/repro/parallel/bcnn_data_parallel.py",
+    "src/repro/kernels/xnor_conv_fused.py",
+    "src/repro/core/bconv.py",
     "src/repro/train/bcnn_train.py",
     "src/repro/core/bcnn_artifact.py",
     "src/repro/launch/train_bcnn.py",

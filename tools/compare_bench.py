@@ -1,0 +1,118 @@
+"""Per-PR perf-record regression gate (CI): compare the newest checked-in
+``BENCH_<n>.json`` against its predecessor and fail on regression.
+
+Records are written by ``benchmarks/gen_bench_record.py`` on whatever
+machine ran them, so wall-clock numbers are machine-relative and the gate
+is deliberately coarse: headline throughput (online engine capacity,
+fleet-router capacity, offline per-plan peak img/s) must stay within
+``NOISE_FLOOR`` (0.5×) of the previous record. The embedded compile-count
+contracts, by contrast, are exact invariants — they must not grow at all.
+Records carrying the ``fused`` section (PR 7+) additionally re-assert the
+fusion claim: modeled boundary HBM bytes of every fused pair must be
+strictly below the unfused path's.
+
+Usage:  python tools/compare_bench.py                 # two newest records
+        python tools/compare_bench.py OLD.json NEW.json
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# wall-clock gate: new headline throughput must be >= NOISE_FLOOR x old.
+# Generous on purpose — records may come from different machines; the gate
+# catches order-of-magnitude regressions (a serialized path, a lost shard),
+# not percent-level noise.
+NOISE_FLOOR = 0.5
+
+
+def _numbered_records() -> list[Path]:
+    recs = {}
+    for p in ROOT.glob("BENCH_*.json"):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", p.name)
+        if m:
+            recs[int(m.group(1))] = p
+    return [recs[k] for k in sorted(recs)]
+
+
+def compare(old: dict, new: dict) -> list[str]:
+    """Human-readable regression list (empty = gate passes)."""
+    problems: list[str] = []
+
+    def gate(name: str, ov, nv):
+        if ov and nv < NOISE_FLOOR * ov:
+            problems.append(f"{name}: {nv:.2f} < {NOISE_FLOOR}x previous "
+                            f"{ov:.2f} (beyond the noise floor)")
+
+    def contract(name: str, ov, nv):
+        if nv != ov:
+            problems.append(f"{name}: compile contract changed "
+                            f"{ov!r} -> {nv!r}")
+
+    gate("online.capacity_hz",
+         old["online"]["capacity_hz"], new["online"]["capacity_hz"])
+    gate("router.capacity_hz",
+         old["router"]["capacity_hz"], new["router"]["capacity_hz"])
+    contract("online.step_compilations",
+             old["online"]["step_compilations"],
+             new["online"]["step_compilations"])
+    contract("router.replica_compilations",
+             old["router"]["replica_compilations"],
+             new["router"]["replica_compilations"])
+
+    # offline curves matched by deployment plan (shards x stages); plans
+    # present in only one record are additions/removals, not regressions
+    def by_plan(rec):
+        return {(c["plan"]["data_shards"], c["plan"]["n_stages"]): c
+                for c in rec["offline"]["curves"]}
+    po, pn = by_plan(old), by_plan(new)
+    for key in sorted(set(po) & set(pn)):
+        tag = f"offline[shards={key[0]},stages={key[1]}]"
+        gate(f"{tag}.peak_img_per_s",
+             po[key]["peak_img_per_s"], pn[key]["peak_img_per_s"])
+        contract(f"{tag}.compilations",
+                 po[key]["compilations"], pn[key]["compilations"])
+
+    # fusion claim (records that carry it): the fused boundary must move
+    # strictly fewer modeled HBM bytes than the unfused two-kernel path
+    for pair in new.get("fused", {}).get("pairs", []):
+        if not pair["boundary_bytes_fused"] < pair["boundary_bytes_unfused"]:
+            problems.append(
+                f"fused[{pair['fused_pair']}]: boundary bytes not reduced "
+                f"({pair['boundary_bytes_fused']} vs unfused "
+                f"{pair['boundary_bytes_unfused']})")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) == 2:
+        old_p, new_p = Path(argv[0]), Path(argv[1])
+    elif not argv:
+        recs = _numbered_records()
+        if len(recs) < 2:
+            print(f"ok: {len(recs)} record(s) checked in — nothing to "
+                  f"compare against yet")
+            return 0
+        old_p, new_p = recs[-2], recs[-1]
+    else:
+        print(__doc__)
+        return 2
+    old = json.loads(old_p.read_text())
+    new = json.loads(new_p.read_text())
+    problems = compare(old, new)
+    if problems:
+        print("\n".join(problems))
+        print(f"FAIL: {len(problems)} perf-record regression(s) "
+              f"({old_p.name} -> {new_p.name})")
+        return 1
+    print(f"ok: {new_p.name} holds the line against {old_p.name} "
+          f"(throughput >= {NOISE_FLOOR}x, compile contracts intact)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
