@@ -48,6 +48,16 @@ Three layers of reproduction:
    is the SLO scheduler's class separation (online tail protected while
    bulk soaks the slack) — plus the per-replica one-compile guard.
 
+7. **Measured, elastic fleet (``--autoscale``)** — the serving fleet
+   under a load STEP (low → burst → idle) with the autoscaler active
+   (serve/autoscale.py): a deterministic pump-mode replay (injected
+   virtual clock, 1 ms/tick) records the replica-count timeline
+   1 → N → 1 and per-class latency through the step, then a wall-clock
+   A/B on one replica pits co-scheduled bulk (micro-chunks behind an
+   online reserve) against bulk-monopoly (the whole batch as one
+   dispatch) at the same offered load — the claim under test is that
+   co-scheduling keeps online p99 strictly below the monopoly tail.
+
 Every ``--json`` dump embeds the deployment-plan metadata
 (shards / stages / micro-batch) alongside the curves, so a dumped curve
 is reproducible from the artifact alone (schema pinned by
@@ -345,6 +355,209 @@ def run_router(verbose: bool = True, **kw) -> dict:
     return res
 
 
+class _TickClock:
+    """Deterministic virtual clock for the pump-mode load-step replay:
+    every reading advances 1 ms, so the autoscaler's window/cooldown and
+    the recorded timeline are machine-independent."""
+
+    def __init__(self, dt: float = 1e-3):
+        self.t = 0.0
+        self.dt = dt
+
+    def __call__(self) -> float:
+        self.t += self.dt
+        return self.t
+
+
+def _cosched_point(packed, online_imgs, bulk_imgs, *, n_slots: int,
+                   reserve: int, chunk: int, conv_strategy: str) -> dict:
+    """One co-scheduling A/B arm: ONE replica offered the same bulk batch
+    + trailing online probes, pump-mode with the real clock. ``reserve``/
+    ``chunk`` select the arm — (online_reserve, n_slots-chunks) is the
+    co-scheduled fleet discipline, (0, whole-batch) the monopoly cliff."""
+    from repro.serve import Router
+
+    router = Router.from_packed(packed, n_replicas=1, n_slots=n_slots,
+                                path="xla", conv_strategy=conv_strategy,
+                                threaded=False, online_reserve=reserve,
+                                max_queue=4 * (len(online_imgs)
+                                               + len(bulk_imgs)))
+    try:
+        t0 = time.perf_counter()
+        router.submit_batch(bulk_imgs, cls="bulk", chunk=chunk)
+        for im in online_imgs:
+            router.submit(im, cls="online")
+        router.run_until_idle()
+        wall = time.perf_counter() - t0
+        st = router.stats("online")
+        compiles = [r.step_cache_size for r in router.replicas_ever]
+        assert all(c == 1 for c in compiles), (
+            f"co-scheduling arm recompiled: {compiles}")
+        return {"reserve": reserve, "chunk": chunk,
+                "n_online": st["n"], "n_bulk": len(bulk_imgs),
+                "online_p50_ms": st["p50"] * 1e3,
+                "online_p95_ms": st["p95"] * 1e3,
+                "online_p99_ms": st["p99"] * 1e3,
+                "wall_ms": wall * 1e3,
+                "replica_compilations": compiles}
+    finally:
+        router.shutdown()
+
+
+def autoscale_curve(n_slots: int = 2, max_replicas: int = 3,
+                    low_requests: int = 4, burst_online: int = 16,
+                    burst_bulk: int = 8, online_probe: int = 6,
+                    ab_bulk: int = 16, idle_pumps: int = 600,
+                    conv_strategy: str = pc.CONV_STRATEGY,
+                    seed: int = 0) -> dict:
+    """Measured elastic-fleet curves (serve/autoscale.py + router
+    co-scheduling).
+
+    1. *Load step* (deterministic): pump-mode fleet on a virtual tick
+       clock, starting at ONE replica. A low trickle holds the pressure
+       under the up-watermark, a mixed online+bulk burst drives it far
+       over (scale-up to ``max_replicas`` headroom), an idle tail drains
+       the window back under the down-watermark (scale-down to the
+       floor). Records the replica-count timeline, per-class latency
+       percentiles in virtual ticks, and the one-compile-per-replica
+       contract over every replica that EVER existed.
+    2. *Co-scheduling A/B* (wall-clock): one replica offered an identical
+       bulk batch + online probes twice — micro-chunked behind an online
+       reserve vs the whole batch as one monopoly dispatch. The online
+       tail must be strictly better co-scheduled.
+    """
+    from repro.serve import AutoscaleConfig, Router
+
+    params = bcnn.init(jax.random.PRNGKey(seed))
+    packed = bcnn.fold_model(params)
+    rng = np.random.default_rng(seed)
+
+    clock = _TickClock()
+    cfg = AutoscaleConfig(min_replicas=1, max_replicas=max_replicas,
+                          up_watermark=2.0, down_watermark=0.25,
+                          window_s=0.004, cooldown_s=0.03, interval_s=1e-3)
+    router = Router.from_packed(
+        packed, n_replicas=1, n_slots=n_slots, path="xla",
+        conv_strategy=conv_strategy, threaded=False, clock=clock,
+        autoscale=cfg, online_reserve=1, bulk_chunk=2,
+        max_queue=4 * (low_requests + burst_online + burst_bulk))
+    try:
+        # phase 1 — low: a trickle the seed replica absorbs alone
+        for i in range(low_requests):
+            router.submit(rng.random((32, 32, 3), np.float32) * 2 - 1,
+                          cls="online")
+            router.run_until_idle()
+        # phase 2 — burst: mixed online+bulk, pressure >> up_watermark
+        for i in range(burst_online):
+            router.submit(rng.random((32, 32, 3), np.float32) * 2 - 1,
+                          cls="online")
+        router.submit_batch(
+            rng.random((burst_bulk, 32, 32, 3), np.float32) * 2 - 1,
+            cls="bulk")
+        router.run_until_idle()
+        # phase 3 — idle: the window drains, the fleet walks back down
+        for _ in range(idle_pumps):
+            router.pump()
+        a = router.autoscaler
+        timeline = a.timeline(1)
+        per_class = {}
+        for nm in router.class_names:
+            st = router.stats(nm)
+            per_class[nm] = ({"n": 0} if st["n"] == 0 else
+                             {"n": st["n"],
+                              "p50_ticks": st["p50"] / clock.dt,
+                              "p95_ticks": st["p95"] / clock.dt,
+                              "p99_ticks": st["p99"] / clock.dt})
+        compiles = [r.step_cache_size for r in router.replicas_ever]
+        assert all(c == 1 for c in compiles), (
+            f"elastic fleet recompiled: per-replica jit cache sizes "
+            f"{compiles} across the load step (contract is exactly 1 per "
+            f"replica, spawned or retired)")
+        load_step = {
+            "phases": {"low": low_requests,
+                       "burst_online": burst_online,
+                       "burst_bulk": burst_bulk,
+                       "idle_pumps": idle_pumps},
+            "clock": "virtual (1 ms/tick)",
+            "timeline": [[t, n] for t, n in timeline],
+            "n_scale_ups": a.n_scale_ups,
+            "n_scale_downs": a.n_scale_downs,
+            "peak_replicas": max(n for _, n in timeline),
+            "final_replicas": router.n_replicas,
+            "per_class": per_class,
+            "replica_compilations": compiles,
+        }
+    finally:
+        router.shutdown()
+
+    online_imgs = rng.random((online_probe, 32, 32, 3)).astype(np.float32)
+    bulk_imgs = rng.random((ab_bulk, 32, 32, 3)).astype(np.float32)
+    cosched = {
+        "coscheduled": _cosched_point(packed, online_imgs, bulk_imgs,
+                                      n_slots=n_slots, reserve=1,
+                                      chunk=n_slots,
+                                      conv_strategy=conv_strategy),
+        "monopoly": _cosched_point(packed, online_imgs, bulk_imgs,
+                                   n_slots=n_slots, reserve=0,
+                                   chunk=ab_bulk,
+                                   conv_strategy=conv_strategy),
+    }
+    return {"n_slots": n_slots,
+            "config": {"min_replicas": cfg.min_replicas,
+                       "max_replicas": cfg.max_replicas,
+                       "up_watermark": cfg.up_watermark,
+                       "down_watermark": cfg.down_watermark,
+                       "window_s": cfg.window_s,
+                       "cooldown_s": cfg.cooldown_s,
+                       "interval_s": cfg.interval_s},
+            "load_step": load_step, "coscheduling": cosched,
+            "conv_strategy": conv_strategy,
+            "plan": {"data_shards": 1, "n_stages": 1, "micro_batch": None,
+                     "n_slots": n_slots, "conv_fusion": pc.CONV_FUSION,
+                     "fused_groups": [[list(g) for g in
+                                       bcnn.plan_layer_groups()]]}}
+
+
+def run_autoscale(verbose: bool = True, **kw) -> dict:
+    res = autoscale_curve(**kw)
+    if verbose:
+        ls, co = res["load_step"], res["coscheduling"]
+        cfg = res["config"]
+        print(f"elastic fleet ({res['n_slots']} slots/replica, "
+              f"{cfg['min_replicas']}..{cfg['max_replicas']} replicas, "
+              f"watermarks {cfg['down_watermark']}/{cfg['up_watermark']}, "
+              f"XLA-on-CPU):")
+        print(f"  load step low({ls['phases']['low']}) → "
+              f"burst({ls['phases']['burst_online']} online + "
+              f"{ls['phases']['burst_bulk']} bulk) → idle — replica "
+              f"timeline ({ls['clock']}):")
+        for t, n in ls["timeline"]:
+            print(f"    t={t:8.3f}  {n} replica(s)")
+        print(f"  {ls['n_scale_ups']} scale-up(s), {ls['n_scale_downs']} "
+              f"scale-down(s); peak {ls['peak_replicas']}, settled back to "
+              f"{ls['final_replicas']}; per-replica compiles "
+              f"{ls['replica_compilations']} (contract: 1 each, ever)")
+        for nm, st in ls["per_class"].items():
+            if st["n"]:
+                print(f"    [{nm}] n={st['n']:3d}  p50 "
+                      f"{st['p50_ticks']:6.0f}  p95 {st['p95_ticks']:6.0f}  "
+                      f"p99 {st['p99_ticks']:6.0f} ticks")
+        print(f"  co-scheduling A/B ({co['monopoly']['n_bulk']} bulk images"
+              f" + {co['monopoly']['n_online']} online probes, 1 replica, "
+              f"wall-clock):")
+        for mode in ("coscheduled", "monopoly"):
+            p = co[mode]
+            print(f"    {mode:12s} (reserve {p['reserve']}, chunk "
+                  f"{p['chunk']:2d}): online p50 {p['online_p50_ms']:7.1f} "
+                  f"ms  p99 {p['online_p99_ms']:7.1f} ms   "
+                  f"(batch wall {p['wall_ms']:7.1f} ms)")
+        ratio = (co["monopoly"]["online_p99_ms"]
+                 / co["coscheduled"]["online_p99_ms"])
+        print(f"    online p99 protected {ratio:.1f}× by co-scheduling "
+              f"(claim: strictly better than the monopoly cliff)")
+    return res
+
+
 def pipeline_curve(stage_counts=pc.FIG7_PIPELINE_STAGE_COUNTS,
                    n_images: int = 16, micro_batch: int = 2,
                    n_slots: int = pc.SERVE_N_SLOTS, reps: int = 2,
@@ -617,6 +830,12 @@ if __name__ == "__main__":
                     help="measure the fleet-router load sweep "
                          "(serve/router.py): offered rate vs per-class "
                          "p99 over replicated engines")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="measure the elastic fleet (serve/autoscale.py): "
+                         "a deterministic low→burst→idle load step "
+                         "recording the replica-count timeline, plus the "
+                         "co-scheduled-bulk vs bulk-monopoly online-p99 "
+                         "A/B")
     ap.add_argument("--replicas", type=int, default=pc.FIG7_ROUTER_REPLICAS,
                     help="replica count for --router")
     ap.add_argument("--slots", type=int, default=pc.SERVE_N_SLOTS)
@@ -633,6 +852,8 @@ if __name__ == "__main__":
     elif args.router:
         out = run_router(n_replicas=args.replicas, n_slots=args.slots,
                          n_requests=args.requests)
+    elif args.autoscale:
+        out = run_autoscale()
     elif args.online:
         out = run_online(n_slots=args.slots, n_requests=args.requests)
     else:

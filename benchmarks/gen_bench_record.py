@@ -43,6 +43,9 @@ def build_record(pr: int, *, fast: bool = False) -> dict:
     offline = fig7.offline_curve(reps=reps)
     router = fig7.router_curve(n_requests=n_req, reps=reps)
     fused_rows = kernels.fused_pair_rows(measure=True, reps=reps)
+    autoscale = fig7.autoscale_curve(
+        **({"max_replicas": 2, "burst_online": 8, "burst_bulk": 4,
+            "ab_bulk": 8, "idle_pumps": 400} if fast else {}))
 
     return {
         "record": pr,
@@ -75,6 +78,26 @@ def build_record(pr: int, *, fast: bool = False) -> dict:
             "fused_groups": [list(g) for g in
                              bcnn.plan_layer_groups(conv_fusion=True)],
             "pairs": fused_rows,
+        },
+        # elastic fleet + mixed-traffic co-scheduling (serve/autoscale.py):
+        # the deterministic load-step replica timeline (virtual-tick clock,
+        # machine-independent), the one-compile-per-replica-EVER contract,
+        # and the wall-clock online-p99 A/B — co-scheduled bulk must beat
+        # the bulk-monopoly cliff at the same offered load
+        "autoscale": {
+            "plan": autoscale["plan"],
+            "config": autoscale["config"],
+            "timeline": autoscale["load_step"]["timeline"],
+            "n_scale_ups": autoscale["load_step"]["n_scale_ups"],
+            "n_scale_downs": autoscale["load_step"]["n_scale_downs"],
+            "peak_replicas": autoscale["load_step"]["peak_replicas"],
+            "final_replicas": autoscale["load_step"]["final_replicas"],
+            "per_class_p99_ticks": {
+                nm: st.get("p99_ticks")
+                for nm, st in autoscale["load_step"]["per_class"].items()},
+            "replica_compilations":
+                autoscale["load_step"]["replica_compilations"],
+            "coscheduling": autoscale["coscheduling"],
         },
         "router": {
             "plan": router["plan"],

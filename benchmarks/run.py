@@ -16,7 +16,8 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default="all",
                     choices=["all", "table3", "table5", "fig7",
                              "fig7-online", "fig7-pipeline", "fig7-offline",
-                             "fig7-router", "roofline", "kernels"])
+                             "fig7-router", "fig7-autoscale", "roofline",
+                             "kernels"])
     ap.add_argument("--no-measure", action="store_true",
                     help="skip wall-clock measurements (CI mode)")
     args = ap.parse_args(argv)
@@ -57,8 +58,9 @@ def main(argv=None) -> None:
         bench("fig7-pipeline", lambda: fig7.run_pipeline())
         bench("fig7-offline", lambda: fig7.run_offline())
         bench("fig7-router", lambda: fig7.run_router())
+        bench("fig7-autoscale", lambda: fig7.run_autoscale())
     elif args.only in ("fig7-online", "fig7-pipeline", "fig7-offline",
-                       "fig7-router"):
+                       "fig7-router", "fig7-autoscale"):
         print(f"{args.only} skipped: it is pure wall-clock measurement and "
               "--no-measure was given")
     bench("kernels", lambda: kernels.run(measure=not args.no_measure))

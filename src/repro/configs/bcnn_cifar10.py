@@ -65,6 +65,25 @@ PRIORITY_MIX = "online=3,bulk=1"
 FIG7_ROUTER_REPLICAS = 2
 FIG7_ROUTER_LOAD_FRACS = (0.25, 0.6, 0.9)
 
+# Elastic fleet autoscaling + mixed-traffic co-scheduling
+# (serve/autoscale.py, serve/router.py, launch/serve_bcnn.py --autoscale):
+# the replica count tracks offered load between hysteresis watermarks
+# (pressure = outstanding images per fleet slot; the config REQUIRES
+# down < up/2 — the oscillation-free invariant), while bulk batches are
+# co-scheduled as BULK_CHUNK-image micro-chunks through the same
+# priority/EDF scheduler with ONLINE_RESERVE per-replica dispatch slots
+# bulk may never occupy. `benchmarks/fig7.py --autoscale` sweeps a
+# low→burst→idle load step against these defaults.
+AUTOSCALE_MIN_REPLICAS = 1
+AUTOSCALE_MAX_REPLICAS = 4
+AUTOSCALE_UP_WATERMARK = 2.0
+AUTOSCALE_DOWN_WATERMARK = 0.25
+AUTOSCALE_WINDOW_S = 0.1
+AUTOSCALE_COOLDOWN_S = 0.5
+AUTOSCALE_INTERVAL_S = 0.02
+ONLINE_RESERVE = 1
+BULK_CHUNK = 2
+
 # Stage-pipelined deployment forward (parallel/bcnn_pipeline.py): number of
 # cost-balanced pipeline stages the packed 9-layer forward is cut into
 # (1 = single-device make_packed_forward, the default) and the micro-batch

@@ -30,6 +30,13 @@ Usage (CPU-scale):
         # scheduling; add --rolling-swap to hot-swap weights across the
         # fleet mid-drive without dropping a request (docs/SERVING.md
         # "Fleet serving")
+    PYTHONPATH=src python -m repro.launch.serve_bcnn --replicas 1 \
+        --autoscale --max-replicas 2 --rolling-swap
+        # ELASTIC fleet (serve/autoscale.py): a controller thread walks
+        # the replica count between --min/--max-replicas as offered load
+        # crosses the hysteresis watermarks; bulk traffic is co-scheduled
+        # in micro-chunks behind an --online-reserve (docs/SERVING.md
+        # "Elastic fleet & co-scheduling")
 """
 from __future__ import annotations
 
@@ -73,15 +80,29 @@ def parse_priority_mix(spec: str) -> dict[str, int]:
 
 
 def serve_fleet(packed, x, args):
-    """The fleet tier: async router over ``--replicas`` engine replicas."""
-    from repro.serve import Router, drive_mixed_poisson
+    """The fleet tier: async router over ``--replicas`` engine replicas,
+    optionally elastic (``--autoscale``: a controller thread walks the
+    replica count between the hysteresis watermarks as load changes)."""
+    from repro.serve import AutoscaleConfig, Router, drive_mixed_poisson
 
     mix = parse_priority_mix(args.priority_mix)
+    autoscale = None
+    if args.autoscale:
+        autoscale = AutoscaleConfig(
+            min_replicas=args.min_replicas, max_replicas=args.max_replicas,
+            up_watermark=pc.AUTOSCALE_UP_WATERMARK,
+            down_watermark=pc.AUTOSCALE_DOWN_WATERMARK,
+            window_s=pc.AUTOSCALE_WINDOW_S,
+            cooldown_s=pc.AUTOSCALE_COOLDOWN_S,
+            interval_s=pc.AUTOSCALE_INTERVAL_S)
     router = Router.from_packed(
         packed, n_replicas=args.replicas, n_slots=args.slots,
         path=args.path, conv_strategy=args.conv_strategy,
         conv_fusion=args.conv_fusion,
-        max_queue=args.max_queue, history=max(4096, args.requests))
+        max_queue=args.max_queue, history=max(4096, args.requests),
+        online_reserve=args.online_reserve,
+        bulk_chunk=args.bulk_chunk if args.bulk_chunk > 0 else None,
+        autoscale=autoscale)
     unknown = set(mix) - set(router.class_names)
     if unknown:
         raise SystemExit(f"--priority-mix: unknown class(es) {sorted(unknown)}"
@@ -92,9 +113,12 @@ def serve_fleet(packed, x, args):
             # hot-swap target: a re-seeded fold of the same architecture
             swap_to = bcnn.fold_model(bcnn.init(jax.random.PRNGKey(
                 args.seed + 1)))
+        elastic = (f", elastic {args.min_replicas}..{args.max_replicas} "
+                   f"replicas (reserve {args.online_reserve})"
+                   if autoscale else "")
         print(f"fleet: {args.replicas} replicas × {args.slots} slots, "
               f"admission queue {args.max_queue}, mix "
-              + ", ".join(f"{k}={v}" for k, v in mix.items()))
+              + ", ".join(f"{k}={v}" for k, v in mix.items()) + elastic)
         if args.rate > 0:
             d = drive_mixed_poisson(router, x, args.rate, mix=mix,
                                     seed=args.seed, swap_to=swap_to)
@@ -105,10 +129,25 @@ def serve_fleet(packed, x, args):
                 print(f"  rolling swap mid-drive: weight epochs served = "
                       f"{sorted(d['epochs'])} (zero drops)")
         else:
+            # bulk burst up front: with --autoscale this is the load step
+            # that provably crosses the up-watermark (requests ≫ slots), so
+            # the controller thread must scale up while the backlog drains
             reqs = router.submit_batch(x, cls="bulk")
+            if autoscale is not None:
+                # sample the burst into the pressure window synchronously —
+                # the controller thread would get there too, but the smoke
+                # lane asserts on the scale-up, so don't race the drain
+                for _ in range(8):
+                    if router.autoscaler.step() > 0:
+                        break
+            if swap_to is not None:
+                router.rolling_swap(swap_to)
             for r in reqs:
                 r.wait(timeout=120.0)
             print(f"batch-of-{args.requests} submitted up front via router")
+            if swap_to is not None:
+                print(f"  rolling swap mid-burst: weight epochs served = "
+                      f"{sorted({r.epoch for r in reqs})} (zero drops)")
         for cls in router.class_names:
             st = router.stats(cls)
             if st["n"] == 0:
@@ -118,9 +157,23 @@ def serve_fleet(packed, x, args):
             print(f"  [{cls}] n={st['n']}  p50 {st['p50']*1e3:7.1f} ms  "
                   f"p95 {st['p95']*1e3:7.1f} ms  "
                   f"p99 {st['p99']*1e3:7.1f} ms{miss}")
-        for rep in router.replicas:
-            print(f"  replica {rep.id}: served {rep.served}, weight epoch "
-                  f"{rep.epoch}, step compiled {rep.step_cache_size}×")
+        if autoscale is not None:
+            a = router.autoscaler
+            print(f"  autoscaler: {a.n_scale_ups} scale-up(s), "
+                  f"{a.n_scale_downs} scale-down(s), timeline "
+                  f"{[(round(t, 3), n) for t, n in a.timeline(args.replicas)]}")
+            if (args.rate == 0 and args.max_replicas > args.replicas
+                    and args.requests
+                    > pc.AUTOSCALE_UP_WATERMARK * args.slots):
+                # the burst held the pressure above the up-watermark for
+                # its whole drain: a scale-up is guaranteed, not hoped for
+                assert a.n_scale_ups >= 1, \
+                    "burst crossed the up-watermark but no replica spawned"
+        for rep in router.replicas_ever:
+            live = "live" if rep in router.replicas else "retired"
+            print(f"  replica {rep.id} ({live}): served {rep.served}, "
+                  f"weight epoch {rep.epoch}, step compiled "
+                  f"{rep.step_cache_size}×")
             assert rep.step_cache_size == 1, "replica recompiled"
     finally:
         router.shutdown()
@@ -182,9 +235,30 @@ def main(argv=None):
                     help="router admission-queue bound; past it requests "
                          "are shed with a typed RouterOverload")
     ap.add_argument("--rolling-swap", action="store_true",
-                    help="with --replicas >= 2: hot-swap the fleet to a "
-                         "re-seeded weight set halfway through the drive "
-                         "(rolling walk — traffic never drops)")
+                    help="with --replicas >= 2 (or --autoscale): hot-swap "
+                         "the fleet to a re-seeded weight set halfway "
+                         "through the drive (rolling walk — traffic never "
+                         "drops)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="elastic fleet (serve/autoscale.py): a controller "
+                         "thread scales the replica count between "
+                         "--min-replicas and --max-replicas as offered "
+                         "load crosses the hysteresis watermarks "
+                         "(AUTOSCALE_* in configs/bcnn_cifar10.py)")
+    ap.add_argument("--min-replicas", type=int,
+                    default=pc.AUTOSCALE_MIN_REPLICAS,
+                    help="autoscaler floor (with --autoscale)")
+    ap.add_argument("--max-replicas", type=int,
+                    default=pc.AUTOSCALE_MAX_REPLICAS,
+                    help="autoscaler ceiling (with --autoscale)")
+    ap.add_argument("--online-reserve", type=int, default=pc.ONLINE_RESERVE,
+                    help="per-replica dispatch slots bulk chunks may never "
+                         "occupy (fleet tier) — keeps online latency flat "
+                         "under a co-scheduled bulk batch; 0 disables")
+    ap.add_argument("--bulk-chunk", type=int, default=pc.BULK_CHUNK,
+                    help="micro-chunk size bulk batches are split into for "
+                         "co-scheduling (fleet tier); 0 = one request per "
+                         "image")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -200,11 +274,12 @@ def main(argv=None):
         packed = bcnn.fold_model(params)
     x, _ = SyntheticImages(global_batch=args.requests,
                            seed=args.seed).batch(0)
-    if args.replicas >= 2:
+    if args.replicas >= 2 or args.autoscale:
         return serve_fleet(packed, x, args)
     if args.rolling_swap:
-        raise SystemExit("--rolling-swap needs --replicas >= 2 "
-                         "(the rolling walk is a fleet-tier operation)")
+        raise SystemExit("--rolling-swap needs --replicas >= 2 or "
+                         "--autoscale (the rolling walk is a fleet-tier "
+                         "operation)")
     eng = BCNNEngine.from_packed(packed, n_slots=args.slots, path=args.path,
                                  conv_strategy=args.conv_strategy,
                                  conv_fusion=args.conv_fusion,

@@ -14,12 +14,15 @@ module is the per-replica half of that split:
   live in ONE FIFO inbox: a swap executes exactly between engine flushes,
   so every request is served by a well-defined weight epoch and the
   replica can report that epoch with each result;
-* **load accounting** — ``load`` counts accepted-but-not-completed items,
-  the quantity the router's least-loaded dispatch compares;
-* **epoch stamping** — ``epoch`` starts at 0 and increments per executed
-  swap; completion callbacks receive it, which is how the router's rolling
-  swap proves "bit-exact logits per weight epoch" under live traffic
-  (tests/test_router.py).
+* **load accounting** — ``load`` counts accepted-but-not-completed
+  *images* (a bulk micro-chunk counts its size), the quantity the
+  router's least-loaded dispatch compares;
+* **epoch stamping** — ``epoch`` starts at the constructor's ``epoch``
+  (0 for a seed-fleet replica; the fleet's current weight epoch for one
+  spawned by ``serve/autoscale.py``-driven scale-up) and increments per
+  executed swap; completion callbacks receive it, which is how the
+  router's rolling swap proves "bit-exact logits per weight epoch" under
+  live traffic (tests/test_router.py).
 
 Threading contract: ``enqueue``/``request_swap``/``stop`` may be called
 from any thread; everything else that touches the engine runs on the
@@ -33,6 +36,13 @@ from collections import deque
 from typing import Any, Callable
 
 import numpy as np
+
+
+def _item_size(item: Any) -> int:
+    """Images carried by a work item: 1 for a single ``(H, W, C)`` image,
+    k for a ``(k, H, W, C)`` bulk micro-chunk."""
+    img = item.image
+    return 1 if img.ndim == 3 else int(img.shape[0])
 
 
 class SwapTicket:
@@ -74,21 +84,27 @@ class EngineReplica:
     thread) once per completed work item — the router uses it to stamp
     completion and resolve the caller's future. ``item`` is whatever
     ``enqueue`` was given; the replica only requires ``item.image`` to be
-    the ``(H, W, C)`` float32 array to classify.
+    the ``(H, W, C)`` float32 array to classify — or, for a co-scheduled
+    bulk micro-chunk, a ``(k, H, W, C)`` stack whose completion logits are
+    the matching ``(k, n_classes)`` stack. ``epoch`` seeds the weight
+    epoch: a replica spawned by a scale-up after N fleet-wide rolling
+    swaps starts at N, so its result stamps agree with the rest of the
+    fleet.
     """
 
     def __init__(self, engine, *, replica_id: int = 0, threaded: bool = True,
                  on_done: Callable[["EngineReplica", Any, np.ndarray, int],
-                                   None] | None = None):
+                                   None] | None = None,
+                 epoch: int = 0):
         self.engine = engine
         self.id = replica_id
         self.on_done = on_done
         self._inbox: deque[Any] = deque()     # work items + _SwapCmds, FIFO
         self._lock = threading.Lock()
         self._wake = threading.Condition(self._lock)
-        self._inflight = 0                    # accepted, not yet completed
+        self._inflight = 0                    # accepted images, not completed
         self._served = 0
-        self._epoch = 0
+        self._epoch = epoch
         self._stopping = False
         self._threaded = threaded
         self._thread: threading.Thread | None = None
@@ -101,20 +117,22 @@ class EngineReplica:
     # ------------------------------------------------------------------ api
     @property
     def load(self) -> int:
-        """Accepted-but-not-completed work items (inbox + in-engine). The
-        router's least-loaded dispatch key; 0 means fully drained."""
+        """Accepted-but-not-completed images (inbox + in-engine; a bulk
+        micro-chunk counts its size). The router's least-loaded dispatch
+        key; 0 means fully drained."""
         with self._lock:
             return self._inflight
 
     @property
     def served(self) -> int:
-        """Total work items completed over the replica's lifetime."""
+        """Total images completed over the replica's lifetime."""
         with self._lock:
             return self._served
 
     @property
     def epoch(self) -> int:
-        """Weight epoch: 0 at construction, +1 per executed swap."""
+        """Weight epoch: the construction seed (0 for a seed-fleet
+        replica), +1 per executed swap."""
         with self._lock:
             return self._epoch
 
@@ -124,13 +142,15 @@ class EngineReplica:
         return self.engine.step_cache_size
 
     def enqueue(self, item: Any) -> None:
-        """Hand one work item (``item.image`` is the input) to the replica.
-        Thread-safe; the worker picks it up at its next iteration."""
+        """Hand one work item (``item.image`` is the input — a single
+        ``(H, W, C)`` image or a ``(k, H, W, C)`` bulk micro-chunk) to the
+        replica. Thread-safe; the worker picks it up at its next
+        iteration."""
         with self._wake:
             if self._stopping:
                 raise RuntimeError(f"replica {self.id} is stopped")
             self._inbox.append(item)
-            self._inflight += 1
+            self._inflight += _item_size(item)
             self._wake.notify()
 
     def request_swap(self, new_packed) -> SwapTicket:
@@ -205,14 +225,23 @@ class EngineReplica:
     def _flush(self, batch: list) -> int:
         if not batch:
             return 0
-        rid_to_item = {self.engine.submit(item.image): item
-                       for item in batch}
+        # one engine rid per image; a multi-image chunk fans out into
+        # consecutive slot submissions and folds back into stacked logits
+        rids: list[tuple[Any, list[int]]] = []
+        n_images = 0
+        for item in batch:
+            img = item.image
+            rows = img if img.ndim == 4 else img[None]
+            rids.append((item, [self.engine.submit(r) for r in rows]))
+            n_images += len(rows)
         out = self.engine.run()
         epoch = self._epoch
         with self._lock:
-            self._inflight -= len(batch)
-            self._served += len(batch)
+            self._inflight -= n_images
+            self._served += n_images
         if self.on_done is not None:
-            for rid, item in rid_to_item.items():
-                self.on_done(self, item, out[rid], epoch)
+            for item, item_rids in rids:
+                logits = (out[item_rids[0]] if item.image.ndim == 3
+                          else np.stack([out[r] for r in item_rids]))
+                self.on_done(self, item, logits, epoch)
         return len(batch)

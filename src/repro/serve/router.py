@@ -8,7 +8,7 @@ This module scales the same discipline *across* engines — the
 million-user tier the ROADMAP names:
 
 * **bounded admission with backpressure** — the router queue holds at most
-  ``max_queue`` undispatched requests; past that, ``submit`` sheds load
+  ``max_queue`` undispatched images; past that, ``submit`` sheds load
   with a typed ``RouterOverload`` (callers see an explicit reject, never
   an unbounded queue or a silent drop);
 * **SLO-aware scheduling, not pure FIFO** — requests carry a
@@ -20,22 +20,43 @@ million-user tier the ROADMAP names:
 * **least-loaded dispatch over N replicas** — each replica
   (``serve/replica.py``) steps its own ``BCNNEngine`` on its own thread;
   the router hands a request to the least-loaded live replica, capped at
-  ``dispatch_depth`` in-flight items each so the backlog stays in the
+  ``dispatch_depth`` in-flight images each so the backlog stays in the
   router where it can still be re-ordered and re-routed;
 * **rolling weight swap** — ``rolling_swap`` walks the replica set one at
   a time: pause dispatch to a replica, let it drain, hot-swap
   (``BCNNEngine.swap_packed``, zero recompiles), resume. The rest of the
   fleet keeps serving, so a model update never drops traffic; every
-  result is stamped with the weight *epoch* that produced it;
+  result is stamped with the weight *epoch* that produced it. The fleet's
+  target epoch and packed artifact update FIRST, so a scale-up racing the
+  swap spawns its replica on the post-swap weights and the walk skips it;
 * **mixed-traffic co-scheduling** — ``submit_batch``/``classify_batch``
-  fold bulk offline work into the same fleet as low-priority requests
-  instead of a separate ``batch_threshold`` device path, so online p99 is
-  protected by the scheduler, not by a hard routing cliff.
+  split bulk offline work into multi-image micro-chunks admitted through
+  the same priority/EDF scheduler instead of a separate
+  ``batch_threshold`` device path, and ``online_reserve`` holds back a
+  slice of every replica's ``dispatch_depth`` that bulk chunks may never
+  occupy — online p99 is protected by the scheduler, not by a hard
+  routing cliff (a reserve-blocked bulk chunk parks aside and lets the
+  online traffic queued behind it flow);
+* **elastic fleet** — ``scale_up`` spawns a fresh replica from the
+  CURRENT weight epoch's packed artifact (compiled and warmed before it
+  takes traffic, so the one-compile-per-replica contract holds for every
+  replica that ever existed); ``scale_down`` retires one via
+  pause → drain → retire, never dropping in-flight work. Pass
+  ``autoscale=`` (a ``serve/autoscale.py::AutoscaleConfig``) to let a
+  ``serve/autoscale.py::FleetAutoscaler`` drive both between hysteresis
+  watermarks — on a controller thread when ``threaded``, one step per
+  ``pump()`` otherwise;
+* **typed shedding on shutdown** — ``shutdown(drain=True)`` serves the
+  backlog until its timeout, then sheds the remainder with a
+  ``RouterShutdown`` (a ``RouterOverload``) raised from each victim's
+  ``wait()``; the per-class ledger (``counters``) closes exactly:
+  submitted == completed + shed + pending, with rejects tracked apart.
 
 Deterministic tests use ``threaded=False``: no worker threads, the caller
-``pump()``s the router (dispatch + every replica) on one thread with an
-injected clock. The CLI (``launch/serve_bcnn.py --replicas``) and the
-``benchmarks/fig7.py --router`` load sweep run ``threaded=True``.
+``pump()``s the router (dispatch + every replica + one autoscaler step)
+on one thread with an injected clock. The CLI (``launch/serve_bcnn.py
+--replicas/--autoscale``) and the ``benchmarks/fig7.py --router``/
+``--autoscale`` load sweeps run ``threaded=True``.
 """
 from __future__ import annotations
 
@@ -48,6 +69,9 @@ from typing import Any, Callable, Iterable, Sequence
 
 import numpy as np
 
+from repro.core.bcnn import assert_swap_compatible
+from repro.serve.autoscale import AutoscaleConfig, FleetAutoscaler, \
+    run_controller
 from repro.serve.bcnn_engine import BCNNEngine
 from repro.serve.replica import EngineReplica
 from repro.serve.slots import latency_stats
@@ -62,17 +86,21 @@ class RequestClass:
     the per-request latency target: within a priority rank the backlog is
     served earliest-absolute-deadline first, and per-class stats report
     the fraction of finished requests that missed it. ``None`` means
-    best-effort (no deadline ordering or accounting).
+    best-effort (no deadline ordering or accounting). ``bulk`` marks the
+    class as offline batch work: its submissions may ride multi-image
+    micro-chunks and are subject to the router's ``online_reserve``
+    (capacity bulk may never take from latency-sensitive classes).
     """
     name: str
     priority: int = 0
     deadline_s: float | None = None
+    bulk: bool = False
 
 
 #: Default traffic classes: latency-sensitive online requests (the paper's
 #: §6.3 individual-request scenario) and best-effort bulk/offline work.
 ONLINE = RequestClass("online", priority=0, deadline_s=0.5)
-BULK = RequestClass("bulk", priority=1, deadline_s=None)
+BULK = RequestClass("bulk", priority=1, deadline_s=None, bulk=True)
 DEFAULT_CLASSES = (ONLINE, BULK)
 
 
@@ -92,6 +120,24 @@ class RouterOverload(RuntimeError):
             f"cannot admit {n_requested} '{cls_name}' request(s)")
 
 
+class RouterShutdown(RouterOverload):
+    """The router shed an ALREADY-ADMITTED request at shutdown (drain
+    timed out, or ``drain=False``). Raised from the victim's ``wait()``
+    so callers distinguish "never ran" from "ran slow" — the same
+    ``RouterOverload`` family as admission-time shedding."""
+
+    def __init__(self, reason: str, n_shed: int = 0):
+        self.cls_name = "*"
+        self.queue_depth = 0
+        self.max_queue = 0
+        self.n_requested = n_shed
+        self.reason = reason
+        self.n_shed = n_shed
+        RuntimeError.__init__(
+            self, f"router shutdown: {reason} ({n_shed} queued request(s) "
+                  f"shed)")
+
+
 @dataclass(eq=False)
 class RouterRequest:
     """One routed request: stamps, class, result, and provenance.
@@ -101,6 +147,10 @@ class RouterRequest:
     ``serve/slots.py::latency_stats`` aggregates these directly.
     ``epoch``/``replica_id`` record which weight epoch on which replica
     produced ``logits`` (the rolling-swap bit-exactness evidence).
+    ``image`` is a single ``(H, W, C)`` image or, for a co-scheduled bulk
+    micro-chunk, a ``(k, H, W, C)`` stack (then ``logits`` is the
+    matching ``(k, n_classes)``). A request shed at shutdown finishes
+    with ``error`` set instead of ``logits``; ``wait()`` re-raises it.
     """
     rid: int
     cls: RequestClass
@@ -109,6 +159,7 @@ class RouterRequest:
     t_dispatch: float | None = None
     t_done: float | None = None
     logits: np.ndarray | None = None
+    error: BaseException | None = None
     epoch: int | None = None
     replica_id: int | None = None
     done: bool = False
@@ -144,10 +195,19 @@ class RouterRequest:
         return self.t_done > self.deadline
 
     def wait(self, timeout: float | None = None) -> np.ndarray:
-        """Block until served (threaded routers), then return the logits."""
+        """Block until served (threaded routers), then return the logits —
+        or re-raise the typed shed error for a request the router gave up
+        on at shutdown."""
         if not self._event.wait(timeout):
             raise TimeoutError(f"request {self.rid} not served in time")
+        if self.error is not None:
+            raise self.error
         return self.logits
+
+
+def _n_images(image) -> int:
+    """Images in a request payload: 1 for (H, W, C), k for (k, H, W, C)."""
+    return 1 if image.ndim == 3 else int(image.shape[0])
 
 
 class Router:
@@ -155,19 +215,29 @@ class Router:
 
     ``engines`` may be heterogeneous in nothing that matters here: each
     must accept the same input shape. Build from a packed net with
-    ``Router.from_packed``. ``dispatch_depth`` caps in-flight items per
-    replica (default ``2 × n_slots``: one stepping batch + one queued
-    behind it) — the rest of the backlog stays router-side where the
-    SLO scheduler can still reorder it.
+    ``Router.from_packed`` — required for the elastic-fleet surface
+    (``scale_up`` needs the packed artifact + an engine factory).
+    ``dispatch_depth`` caps in-flight images per replica (default
+    ``2 × n_slots``: one stepping batch + one queued behind it) — the
+    rest of the backlog stays router-side where the SLO scheduler can
+    still reorder it. ``online_reserve`` slots of that depth are never
+    granted to ``bulk`` classes; ``bulk_chunk`` sets the default
+    micro-chunk size for ``submit_batch`` (None = one request per image).
     """
 
     def __init__(self, engines: Sequence[BCNNEngine], *,
                  classes: Sequence[RequestClass] = DEFAULT_CLASSES,
                  max_queue: int = 256,
                  dispatch_depth: int | None = None,
+                 online_reserve: int = 0,
+                 bulk_chunk: int | None = None,
+                 autoscale: AutoscaleConfig | None = None,
                  clock: Callable[[], float] = time.perf_counter,
                  history: int = 4096,
-                 threaded: bool = True):
+                 threaded: bool = True,
+                 packed=None,
+                 engine_factory: Callable[[Any], BCNNEngine] | None = None,
+                 warm_on_scale: bool = True):
         if not engines:
             raise ValueError("need at least one engine")
         names = [c.name for c in classes]
@@ -182,19 +252,59 @@ class Router:
         self.clock = clock
         self._depth = (dispatch_depth if dispatch_depth is not None
                        else 2 * max(e.n_slots for e in engines))
+        if not 0 <= online_reserve < max(self._depth, 1):
+            raise ValueError(
+                f"online_reserve must be in [0, dispatch_depth="
+                f"{self._depth}), got {online_reserve} — a reserve that "
+                f"covers the whole depth starves bulk forever")
+        if bulk_chunk is not None and bulk_chunk < 1:
+            raise ValueError(f"bulk_chunk must be >= 1, got {bulk_chunk}")
+        self._reserve = online_reserve
+        self._bulk_chunk = bulk_chunk
         self._lock = threading.Lock()
+        self._scale_lock = threading.RLock()   # serializes swap/scale walks
         self._heap: list[tuple[int, float, int, RouterRequest]] = []
         self._seq = 0
         self._next_rid = 0
+        self._queued_images = 0
         self._paused: set[int] = set()
+        self._stopped = False
+        self._shutting_down = False
         self._submitted = {c.name: 0 for c in classes}
         self._rejected = {c.name: 0 for c in classes}
         self._completed = {c.name: 0 for c in classes}
+        self._shed = {c.name: 0 for c in classes}
+        self._deadline_missed = 0
+        self._deadline_total = 0
         self._finished = {c.name: deque(maxlen=history) for c in classes}
+        self._fleet_epoch = 0
+        self._current_packed = packed
+        self._make_engine = engine_factory
+        self._warm_on_scale = warm_on_scale
         self._replicas = [
             EngineReplica(e, replica_id=i, threaded=threaded,
                           on_done=self._on_done)
             for i, e in enumerate(engines)]
+        self._next_replica_id = len(self._replicas)
+        self._bulk_inflight = {r.id: 0 for r in self._replicas}
+        self._retired: list[EngineReplica] = []
+        self._autoscaler: FleetAutoscaler | None = None
+        self._controller_thread: threading.Thread | None = None
+        self._controller_stop: threading.Event | None = None
+        if autoscale is not None:
+            if self._make_engine is None:
+                raise ValueError(
+                    "autoscale needs an engine factory to spawn replicas; "
+                    "build the router with Router.from_packed")
+            self._autoscaler = FleetAutoscaler(self, autoscale)
+            if threaded:
+                self._controller_stop = threading.Event()
+                self._controller_thread = threading.Thread(
+                    target=run_controller,
+                    args=(self._autoscaler, self._controller_stop,
+                          autoscale.interval_s),
+                    name="bcnn-autoscale", daemon=True)
+                self._controller_thread.start()
 
     # ---------------------------------------------------------- construction
     @classmethod
@@ -210,23 +320,58 @@ class Router:
         exactly once: ``step_cache_size == 1`` *per replica*); ``warmup``
         compiles them before any traffic so the first requests don't pay
         N compilations. ``conv_fusion`` threads to every replica's forward
-        (the cross-layer fused megakernel — bit-exact, same contracts)."""
+        (the cross-layer fused megakernel — bit-exact, same contracts).
+        The same factory is retained for ``scale_up``, so an elastically
+        spawned replica is configured identically and built from the
+        fleet's CURRENT packed artifact (post-swap if a rolling swap is
+        in flight)."""
         if n_replicas < 1:
             raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
         kw = {} if n_slots is None else {"n_slots": n_slots}
-        engines = [BCNNEngine.from_packed(packed, path=path,
+
+        def make_engine(p):
+            return BCNNEngine.from_packed(p, path=path,
                                           conv_strategy=conv_strategy,
                                           conv_fusion=conv_fusion,
                                           clock=clock, history=history, **kw)
-                   for _ in range(n_replicas)]
+
+        engines = [make_engine(packed) for _ in range(n_replicas)]
         if warmup:
             for e in engines:
                 e.warmup()
-        return cls(engines, clock=clock, history=history, **router_kw)
+        return cls(engines, clock=clock, history=history, packed=packed,
+                   engine_factory=make_engine, warm_on_scale=warmup,
+                   **router_kw)
 
     @property
     def replicas(self) -> tuple[EngineReplica, ...]:
-        return tuple(self._replicas)
+        with self._lock:
+            return tuple(self._replicas)
+
+    @property
+    def replicas_ever(self) -> tuple[EngineReplica, ...]:
+        """Every replica that ever served: live + retired. The
+        one-compile-per-replica contract is asserted over THIS set — a
+        retired replica's jit cache is part of the evidence."""
+        with self._lock:
+            return tuple(self._replicas) + tuple(self._retired)
+
+    @property
+    def n_replicas(self) -> int:
+        with self._lock:
+            return len(self._replicas)
+
+    @property
+    def fleet_epoch(self) -> int:
+        """Target weight epoch: bumped at the START of each rolling swap
+        (with ``_current_packed``), so concurrent scale-ups land on the
+        new weights."""
+        with self._lock:
+            return self._fleet_epoch
+
+    @property
+    def autoscaler(self) -> FleetAutoscaler | None:
+        return self._autoscaler
 
     @property
     def class_names(self) -> tuple[str, ...]:
@@ -237,30 +382,106 @@ class Router:
                cls: RequestClass | str = "online") -> RouterRequest:
         """Admit one request (or shed it with ``RouterOverload``). Returns
         its ticket; ``.wait()`` for the logits on a threaded router."""
-        return self._admit([image], self._resolve_class(cls))[0]
+        return self._admit([np.asarray(image, np.float32)],
+                           self._resolve_class(cls))[0]
 
     def submit_batch(self, images: Iterable[np.ndarray],
-                     cls: RequestClass | str = "bulk"
-                     ) -> list[RouterRequest]:
-        """Admit a bulk batch ATOMICALLY: either every image is queued (at
-        the class's priority, co-scheduled with everything else) or the
-        whole batch is shed with one ``RouterOverload`` — a half-admitted
-        batch is useless to an offline caller."""
-        return self._admit(list(images), self._resolve_class(cls))
+                     cls: RequestClass | str = "bulk",
+                     chunk: int | None = None) -> list[RouterRequest]:
+        """Admit a bulk batch ATOMICALLY: either the whole batch is queued
+        (at the class's priority, co-scheduled with everything else) or it
+        is shed with one ``RouterOverload`` — a half-admitted batch is
+        useless to an offline caller. A ``bulk`` class's batch is split
+        into ``chunk``-image micro-chunks (default: the router's
+        ``bulk_chunk``; None = one request per image), each one scheduler
+        entry — so a huge batch interleaves with online traffic at chunk
+        granularity instead of monopolizing a replica. When
+        ``online_reserve`` is set, chunks clamp to the per-replica bulk
+        budget ``dispatch_depth - online_reserve`` so they stay
+        dispatchable."""
+        c = self._resolve_class(cls)
+        arr = [np.asarray(im, np.float32) for im in images]
+        if c.bulk:
+            chunk = chunk if chunk is not None else self._bulk_chunk
+            if chunk is not None and self._reserve > 0:
+                chunk = max(1, min(chunk, self._depth - self._reserve))
+            if chunk is not None and chunk > 1:
+                flat = np.stack(arr) if arr else np.empty((0,))
+                arr = [flat[i:i + chunk] for i in range(0, len(flat), chunk)]
+        return self._admit(arr, c)
 
     def classify_batch(self, images: np.ndarray,
-                       cls: RequestClass | str = "bulk") -> np.ndarray:
+                       cls: RequestClass | str = "bulk",
+                       chunk: int | None = None) -> np.ndarray:
         """Bulk convenience: ``submit_batch`` + gather, → (N, n_classes)
         logits in input order. Unlike the single-engine
         ``BCNNEngine.classify_batch`` there is no ``batch_threshold``
         cliff: the batch rides the scheduler at its class's priority, so
         co-arriving online traffic keeps its latency SLO while the batch
         soaks up the remaining fleet capacity."""
-        reqs = self.submit_batch(np.asarray(images, np.float32), cls=cls)
+        reqs = self.submit_batch(np.asarray(images, np.float32), cls=cls,
+                                 chunk=chunk)
         if not self.threaded:
             self.run_until_idle()
-            return np.stack([r.logits for r in reqs])
-        return np.stack([r.wait() for r in reqs])
+            outs = [r.logits for r in reqs]
+        else:
+            outs = [r.wait() for r in reqs]
+        return np.concatenate([o if o.ndim == 2 else o[None] for o in outs])
+
+    def scale_up(self) -> EngineReplica:
+        """Spawn one replica from the fleet's CURRENT packed artifact:
+        build via the retained ``from_packed`` factory, compile + warm
+        BEFORE it joins dispatch (one compile per replica, ever), seed its
+        weight epoch with the fleet's target epoch. Returns the new
+        replica."""
+        with self._scale_lock:
+            if self._make_engine is None:
+                raise RuntimeError(
+                    "scale_up needs an engine factory; build the router "
+                    "with Router.from_packed")
+            if self._stopped:
+                raise RuntimeError("router is shut down")
+            engine = self._make_engine(self._current_packed)
+            if self._warm_on_scale:
+                engine.warmup()
+            with self._lock:
+                rid = self._next_replica_id
+                self._next_replica_id += 1
+                epoch = self._fleet_epoch
+            rep = EngineReplica(engine, replica_id=rid,
+                                threaded=self.threaded,
+                                on_done=self._on_done, epoch=epoch)
+            with self._lock:
+                self._replicas.append(rep)
+                self._bulk_inflight[rep.id] = 0
+        self._dispatch()
+        return rep
+
+    def scale_down(self, *, timeout: float = 60.0) -> int:
+        """Retire one replica — least-loaded, newest on ties — by
+        pause → drain → retire: dispatch stops feeding it, its in-flight
+        work completes, then it leaves the live set (into ``replicas_ever``
+        for the compile-contract audit) and its worker stops. Never drops
+        a request. Returns the retired replica's id."""
+        with self._scale_lock:
+            with self._lock:
+                if len(self._replicas) <= 1:
+                    raise RuntimeError("cannot scale below 1 replica")
+                rep = min(self._replicas, key=lambda r: (r.load, -r.id))
+                self._paused.add(rep.id)
+            try:
+                self._dispatch()        # the rest of the fleet takes over
+                self._drain_replica(rep, timeout)
+            finally:
+                with self._lock:
+                    self._paused.discard(rep.id)
+            with self._lock:
+                self._replicas.remove(rep)
+                self._bulk_inflight.pop(rep.id, None)
+                self._retired.append(rep)
+            rep.stop(timeout)
+        self._dispatch()
+        return rep.id
 
     def rolling_swap(self, new_packed, *, timeout: float = 60.0) -> int:
         """Hot-swap the fleet's weights one replica at a time, never
@@ -268,35 +489,59 @@ class Router:
         feeding the others), wait for it to drain, swap on its idle engine
         (``BCNNEngine.swap_packed`` — zero recompiles), resume, move on.
         Returns the number of replicas swapped. An incompatible
-        replacement is rejected by the FIRST replica's engine before any
-        replica swapped, so a failed swap leaves the fleet consistent."""
-        swapped = 0
-        for rep in self._replicas:
+        replacement is rejected upfront (``core/bcnn.py::
+        assert_swap_compatible`` against the fleet's current artifact)
+        before ANY fleet state changes, so a failed swap leaves the fleet
+        consistent. The fleet's target epoch and packed artifact advance
+        BEFORE the walk: a scale-up racing the swap spawns its replica on
+        the post-swap weights, and the walk skips any replica already at
+        (or past) the target epoch."""
+        with self._scale_lock:
+            if self._current_packed is not None:
+                assert_swap_compatible(self._current_packed, new_packed)
             with self._lock:
-                self._paused.add(rep.id)
-            try:
-                self._dispatch()            # re-route its share of backlog
-                self._drain_replica(rep, timeout)
-                ticket = rep.request_swap(new_packed)
-                if not self.threaded:
-                    rep.pump()
-                ticket.wait(timeout)
-                swapped += 1
-            finally:
+                self._fleet_epoch += 1
+                target = self._fleet_epoch
+                if self._current_packed is not None:
+                    self._current_packed = new_packed
+                walk = list(self._replicas)
+            swapped = 0
+            for rep in walk:
                 with self._lock:
-                    self._paused.discard(rep.id)
-                self._dispatch()
-        return swapped
+                    skip = (rep not in self._replicas    # retired mid-walk
+                            or rep.epoch >= target)      # spawned post-swap
+                    if not skip:
+                        self._paused.add(rep.id)
+                if skip:
+                    continue
+                try:
+                    self._dispatch()    # re-route its share of backlog
+                    self._drain_replica(rep, timeout)
+                    ticket = rep.request_swap(new_packed)
+                    if not self.threaded:
+                        rep.pump()
+                    ticket.wait(timeout)
+                    swapped += 1
+                finally:
+                    with self._lock:
+                        self._paused.discard(rep.id)
+                    self._dispatch()
+            return swapped
 
     def pump(self) -> int:
         """Non-threaded mode: one deterministic scheduling round on the
-        calling thread — dispatch the backlog, then let every replica
-        process its inbox. Returns completed request count."""
+        calling thread — one autoscaler step (if configured), dispatch the
+        backlog, then let every live replica process its inbox. Returns
+        completed request count."""
         if self.threaded:
             raise RuntimeError("pump() is for threaded=False routers; "
                                "threaded replicas run continuously")
+        if self._autoscaler is not None and not self._shutting_down:
+            self._autoscaler.step()
         self._dispatch()
-        return sum(rep.pump() for rep in self._replicas)
+        with self._lock:
+            reps = list(self._replicas)
+        return sum(rep.pump() for rep in reps)
 
     def run_until_idle(self, max_pumps: int = 100_000) -> int:
         """Non-threaded mode: pump until nothing is queued or in flight."""
@@ -309,43 +554,80 @@ class Router:
                            f"({self.pending} pending)")
 
     def shutdown(self, *, drain: bool = True, timeout: float = 60.0) -> None:
-        """Stop the replica workers (after serving the backlog unless
-        ``drain=False``; shed-but-unserved work raises nothing — accepted
-        requests are always completed first)."""
+        """Stop the fleet. ``drain=True`` serves the backlog first, but
+        BOUNDED: past ``timeout`` (e.g. a wedged replica under a deep
+        backlog) the still-queued requests are shed with a typed
+        ``RouterShutdown`` — their ``wait()`` raises instead of hanging,
+        the ledger stays closed, and shutdown itself always terminates.
+        ``drain=False`` sheds the queue immediately; work already inside a
+        replica still completes (replicas finish their inbox on stop)."""
+        self._shutting_down = True          # no scale events during teardown
+        if self._controller_stop is not None:
+            self._controller_stop.set()
+            if self._controller_thread is not None:
+                self._controller_thread.join(timeout)
+        deadline = time.monotonic() + timeout
         if drain:
             if self.threaded:
-                deadline = time.monotonic() + timeout
-                while self.pending:
+                while self.pending and time.monotonic() < deadline:
                     self._dispatch()
-                    if time.monotonic() > deadline:
-                        raise TimeoutError(
-                            f"{self.pending} requests still pending")
                     time.sleep(0.001)
             else:
-                self.run_until_idle()
-        for rep in self._replicas:
-            rep.stop(timeout)
+                while self.pending:
+                    before = self.pending
+                    if self.pump() == 0 and self.pending >= before:
+                        break       # wedged (nothing moves): shed below
+        self._shed_queue("drain timed out" if drain else "drain=False")
+        with self._lock:
+            self._stopped = True
+            reps = list(self._replicas)
+        for rep in reps:
+            if not self.threaded:
+                rep.pump()          # replicas finish their inbox on stop
+            rep.stop(max(deadline - time.monotonic(), 0.1))
 
     # ------------------------------------------------------------ accounting
     @property
     def pending(self) -> int:
-        """Undispatched + in-flight request count across the fleet."""
+        """Undispatched + in-flight image count across the fleet."""
         with self._lock:
-            queued = len(self._heap)
-        return queued + sum(rep.load for rep in self._replicas)
+            queued = self._queued_images
+            reps = list(self._replicas)
+        return queued + sum(rep.load for rep in reps)
 
     @property
     def n_queued(self) -> int:
+        """Undispatched scheduler entries (a bulk micro-chunk counts 1;
+        see ``pending`` for image units)."""
         with self._lock:
             return len(self._heap)
 
+    def load_snapshot(self) -> dict:
+        """One consistent reading of fleet load — the autoscaler's sensor:
+        queued/in-flight/outstanding images, live replica + slot counts,
+        and the cumulative deadline ledger (missed/total finished requests
+        of deadline-carrying classes) for windowed miss-fraction diffs."""
+        with self._lock:
+            queued = self._queued_images
+            reps = list(self._replicas)
+            missed, total = self._deadline_missed, self._deadline_total
+        inflight = sum(r.load for r in reps)
+        return {"queued": queued, "inflight": inflight,
+                "outstanding": queued + inflight,
+                "n_replicas": len(reps),
+                "total_slots": sum(r.engine.n_slots for r in reps),
+                "deadline_missed": missed, "deadline_total": total}
+
     def counters(self) -> dict:
-        """Per-class admission ledger: submitted = completed + rejected +
-        pending (the zero-drop bookkeeping the tests pin)."""
+        """Per-class admission ledger in image units. Closed exactly:
+        submitted == completed + shed + pending, with ``rejected``
+        (never admitted) tracked apart — the zero-drop bookkeeping the
+        tests pin."""
         with self._lock:
             return {c.name: {"submitted": self._submitted[c.name],
                              "rejected": self._rejected[c.name],
-                             "completed": self._completed[c.name]}
+                             "completed": self._completed[c.name],
+                             "shed": self._shed[c.name]}
                     for c in self.classes}
 
     def stats(self, cls: RequestClass | str | None = None) -> dict:
@@ -380,17 +662,19 @@ class Router:
             raise ValueError(f"unknown request class {cls!r}; "
                              f"router classes: {sorted(self._by_name)}")
 
-    def _admit(self, images: list, c: RequestClass) -> list[RouterRequest]:
+    def _admit(self, arrays: list, c: RequestClass) -> list[RouterRequest]:
+        n_images = sum(_n_images(a) for a in arrays)
         with self._lock:
-            if len(self._heap) + len(images) > self.max_queue:
-                self._rejected[c.name] += len(images)
-                raise RouterOverload(c.name, len(self._heap),
-                                     self.max_queue, len(images))
+            if self._stopped:
+                raise RouterShutdown("submit after shutdown")
+            if self._queued_images + n_images > self.max_queue:
+                self._rejected[c.name] += n_images
+                raise RouterOverload(c.name, self._queued_images,
+                                     self.max_queue, n_images)
             reqs = []
             now = self.clock()
-            for image in images:
-                req = RouterRequest(rid=self._next_rid, cls=c,
-                                    image=np.asarray(image, np.float32),
+            for image in arrays:
+                req = RouterRequest(rid=self._next_rid, cls=c, image=image,
                                     t_submit=now)
                 self._next_rid += 1
                 # (priority, earliest-deadline, arrival seq): strict
@@ -401,44 +685,124 @@ class Router:
                        self._seq)
                 self._seq += 1
                 heapq.heappush(self._heap, (*key, req))
-                self._submitted[c.name] += 1
+                self._queued_images += _n_images(image)
+                self._submitted[c.name] += _n_images(image)
                 reqs.append(req)
         self._dispatch()
         return reqs
 
+    def _pick_replica(self, live: list, req: RouterRequest):
+        """Least-loaded live replica with room for ``req`` — or None.
+        Bulk work under a nonzero ``online_reserve`` additionally fits
+        within the per-replica bulk budget ``depth - reserve``, so the
+        reserve slots stay free for latency-sensitive classes."""
+        k = _n_images(req.image)
+        if req.cls.bulk and self._reserve > 0:
+            budget = self._depth - self._reserve
+            cands = [r for r in live if r.load < self._depth
+                     and self._bulk_inflight.get(r.id, 0) + k <= budget]
+        else:
+            cands = [r for r in live if r.load < self._depth]
+        if not cands:
+            return None
+        return min(cands, key=lambda r: (r.load, r.id))
+
     def _dispatch(self) -> None:
         """Move backlog to replicas: least-loaded first, capped at
-        ``dispatch_depth`` in-flight per replica, paused replicas skipped
-        (the rolling-swap walk). Safe from any thread."""
+        ``dispatch_depth`` in-flight images per replica, paused replicas
+        skipped (the rolling-swap/scale-down walks). A bulk entry blocked
+        by the online reserve parks aside so higher-seq online entries
+        still flow (later same-class entries park too — FIFO within the
+        class survives); a blocked NON-bulk head stops dispatch (strict
+        priority: nothing overtakes it). Safe from any thread."""
         while True:
             with self._lock:
-                if not self._heap:
+                picked = None
+                parked: list = []
+                blocked: set[str] = set()
+                while self._heap:
+                    entry = heapq.heappop(self._heap)
+                    req: RouterRequest = entry[-1]
+                    if req.cls.bulk and req.cls.name in blocked:
+                        parked.append(entry)
+                        continue
+                    live = [r for r in self._replicas
+                            if r.id not in self._paused]
+                    rep = self._pick_replica(live, req) if live else None
+                    if rep is None:
+                        parked.append(entry)
+                        if req.cls.bulk and live:
+                            blocked.add(req.cls.name)
+                            continue
+                        break
+                    picked = (rep, entry)
+                    break
+                for e in parked:
+                    heapq.heappush(self._heap, e)
+                if picked is None:
                     return
-                live = [r for r in self._replicas
-                        if r.id not in self._paused]
-                if not live:
-                    return
-                rep = min(live, key=lambda r: (r.load, r.id))
-                if rep.load >= self._depth:
-                    return
-                *_, req = heapq.heappop(self._heap)
+                rep, entry = picked
+                req = entry[-1]
+                k = _n_images(req.image)
                 req.t_dispatch = self.clock()
                 req.replica_id = rep.id
-            rep.enqueue(req)            # replica lock; never inside ours
+                self._queued_images -= k
+                if req.cls.bulk:
+                    self._bulk_inflight[rep.id] = (
+                        self._bulk_inflight.get(rep.id, 0) + k)
+            try:
+                rep.enqueue(req)        # replica lock; never inside ours
+            except RuntimeError:
+                # replica retired between pick and enqueue: requeue intact
+                with self._lock:
+                    req.t_dispatch = None
+                    req.replica_id = None
+                    self._queued_images += k
+                    if req.cls.bulk and rep.id in self._bulk_inflight:
+                        self._bulk_inflight[rep.id] -= k
+                    heapq.heappush(self._heap, entry)
 
     def _on_done(self, rep: EngineReplica, req: RouterRequest,
                  logits: np.ndarray, epoch: int) -> None:
         """Replica completion callback (runs on the replica's thread)."""
+        k = 1 if logits.ndim == 1 else int(logits.shape[0])
         req.logits = logits
         req.epoch = epoch
         req.image = None
         req.t_done = self.clock()
         req.done = True
         with self._lock:
-            self._completed[req.cls.name] += 1
+            self._completed[req.cls.name] += k
             self._finished[req.cls.name].append(req)
+            if req.cls.bulk and rep.id in self._bulk_inflight:
+                self._bulk_inflight[rep.id] -= k
+            if req.cls.deadline_s is not None:
+                self._deadline_total += 1
+                if req.deadline_missed:
+                    self._deadline_missed += 1
         req._event.set()
         self._dispatch()                # a slot's worth of capacity freed
+
+    def _shed_queue(self, reason: str) -> int:
+        """Fail every still-queued request with a typed ``RouterShutdown``
+        (counted in the ``shed`` ledger column; their ``wait()`` raises).
+        Returns the number of requests shed."""
+        with self._lock:
+            victims = [e[-1] for e in self._heap]
+            self._heap = []
+            for req in victims:
+                k = _n_images(req.image)
+                self._queued_images -= k
+                self._shed[req.cls.name] += k
+        if not victims:
+            return 0
+        err = RouterShutdown(reason, n_shed=len(victims))
+        for req in victims:
+            req.error = err
+            req.image = None
+            req.done = True
+            req._event.set()
+        return len(victims)
 
     def _drain_replica(self, rep: EngineReplica, timeout: float) -> None:
         if not self.threaded:

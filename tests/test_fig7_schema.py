@@ -106,6 +106,42 @@ def test_router_schema(fig7):
     assert served + load["n_rejected"][0] == 4      # admission ledger closes
 
 
+@pytest.mark.slow
+def test_autoscale_schema(fig7):
+    """`--autoscale` artifact: the load-step timeline + the co-scheduling
+    A/B. Tiny parameterization, but the dynamics are pinned: the burst
+    must scale 1 → max_replicas, the idle tail must settle back to the
+    floor, and every replica that ever existed compiled exactly once."""
+    res = _roundtrip(fig7, fig7.autoscale_curve(
+        n_slots=2, max_replicas=2, low_requests=2, burst_online=6,
+        burst_bulk=4, online_probe=3, ab_bulk=6, idle_pumps=400))
+    assert PLAN_KEYS <= res["plan"].keys()
+    _assert_fusion_plan(res["plan"])
+    assert {"min_replicas", "max_replicas", "up_watermark",
+            "down_watermark", "window_s", "cooldown_s",
+            "interval_s"} <= res["config"].keys()
+    ls = res["load_step"]
+    # timeline is [[t, n], ...] starting from the seed fleet of 1
+    assert ls["timeline"][0][1] == 1
+    assert ls["n_scale_ups"] >= 1 and ls["n_scale_downs"] >= 1
+    assert ls["peak_replicas"] == 2 and ls["final_replicas"] == 1
+    assert all(c == 1 for c in ls["replica_compilations"])
+    assert len(ls["replica_compilations"]) >= 2      # spawned + retired
+    for nm in ("online", "bulk"):
+        st = ls["per_class"][nm]
+        assert st["n"] > 0 and st["p99_ticks"] > 0
+    co = res["coscheduling"]
+    assert set(co) == {"coscheduled", "monopoly"}
+    for mode, arm in co.items():
+        assert {"reserve", "chunk", "online_p50_ms", "online_p95_ms",
+                "online_p99_ms", "wall_ms",
+                "replica_compilations"} <= arm.keys()
+        assert all(c == 1 for c in arm["replica_compilations"])
+    assert co["coscheduled"]["reserve"] == 1
+    assert co["monopoly"]["reserve"] == 0
+    assert co["monopoly"]["chunk"] == co["monopoly"]["n_bulk"]
+
+
 def test_bench_record_schema():
     """The checked-in per-PR perf record (BENCH_<n>.json, written by
     benchmarks/gen_bench_record.py — ROADMAP item 4). Validates structure
@@ -146,6 +182,29 @@ def test_bench_record_schema():
             for pair in fu["pairs"]:
                 assert pair["boundary_bytes_fused"] \
                     < pair["boundary_bytes_unfused"]
+        # records from the elastic-fleet PR onward carry the autoscale
+        # section: the load-step timeline, the one-compile-per-replica-
+        # EVER contract, and the co-scheduling online-p99 protection
+        if rec["record"] >= 8:
+            assert "autoscale" in rec, path.name
+            aut = rec["autoscale"]
+            assert PLAN_KEYS <= aut["plan"].keys()
+            _assert_fusion_plan(aut["plan"])
+            assert aut["config"]["down_watermark"] \
+                < aut["config"]["up_watermark"] / 2      # hysteresis gap
+            assert aut["timeline"][0][1] == 1            # seed fleet of 1
+            assert aut["n_scale_ups"] >= 1 and aut["n_scale_downs"] >= 1
+            assert aut["peak_replicas"] > aut["timeline"][0][1]
+            assert aut["final_replicas"] == aut["config"]["min_replicas"]
+            assert all(c == 1 for c in aut["replica_compilations"])
+            assert len(aut["replica_compilations"]) \
+                >= aut["peak_replicas"]                  # retirees counted
+            assert aut["per_class_p99_ticks"]["online"] > 0
+            co = aut["coscheduling"]
+            for arm in co.values():
+                assert all(c == 1 for c in arm["replica_compilations"])
+            assert co["coscheduled"]["online_p99_ms"] \
+                < co["monopoly"]["online_p99_ms"]
 
 
 def test_paper_curves_jsonable(fig7):

@@ -10,6 +10,8 @@ completes (zero drops), logits are bit-exact for the weight epoch that
 served them, and ``step_cache_size == 1`` on every replica. A small
 threaded smoke exercises the real worker-thread machinery end to end.
 """
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,7 +19,7 @@ import pytest
 
 from repro.core import bcnn
 from repro.serve import (BCNNEngine, RequestClass, Router, RouterOverload,
-                         drive_mixed_poisson)
+                         RouterShutdown, drive_mixed_poisson)
 from repro.serve.router import BULK, ONLINE
 
 
@@ -126,7 +128,8 @@ def test_backpressure_typed_rejection_and_atomic_batch():
     # ... while one that fits is admitted in full
     assert len(r2.submit_batch([img(i) for i in range(3)], cls="bulk")) == 3
     c = r2.counters()
-    assert c["bulk"] == {"submitted": 3, "rejected": 4, "completed": 0}
+    assert c["bulk"] == {"submitted": 3, "rejected": 4, "completed": 0,
+                         "shed": 0}
 
 
 def test_unknown_class_rejected():
@@ -251,6 +254,52 @@ def test_rolling_swap_while_idle(packed_a, packed_b):
                                            path="xla"))
     np.testing.assert_array_equal(router.classify_batch(x), ref_b)
     assert all(rep.step_cache_size == 1 for rep in router.replicas)
+
+
+# ---------------------------------------------------------- shutdown/drain
+def test_shutdown_drain_timeout_sheds_typed_threaded():
+    """Regression (ISSUE 8): ``shutdown(drain=True)`` with a backlog that
+    CANNOT drain (dispatch frozen — the stand-in for a wedged replica)
+    must terminate within its timeout and shed the remainder with typed
+    ``RouterShutdown`` errors raised from each victim's ``wait()`` —
+    never hang, never raise out of shutdown, never drop silently."""
+    engines = [BCNNEngine(toy_forward, n_slots=1, input_shape=(4, 4, 1))]
+    r = Router(engines, threaded=True, max_queue=8, dispatch_depth=0)
+    reqs = [r.submit(img(i)) for i in range(4)]
+    t0 = time.monotonic()
+    r.shutdown(drain=True, timeout=0.3)
+    assert time.monotonic() - t0 < 10.0
+    for q in reqs:
+        assert q.done and q.error is not None
+        with pytest.raises(RouterShutdown):
+            q.wait(timeout=1.0)
+    c = r.counters()["online"]
+    assert c == {"submitted": 4, "rejected": 0, "completed": 0, "shed": 4}
+    assert r.pending == 0                  # the ledger closed: none vanish
+    with pytest.raises(RouterShutdown):    # post-shutdown admits are typed
+        r.submit(img(9))
+
+
+def test_shutdown_wedged_pump_mode_sheds_not_hangs():
+    r = toy_router(n_replicas=1, n_slots=1, max_queue=8, dispatch_depth=0)
+    reqs = [r.submit(img(i)) for i in range(3)]
+    r.shutdown(drain=True, timeout=1.0)    # wedged drain: no 100k-pump spin
+    assert all(q.done for q in reqs)
+    assert r.counters()["online"]["shed"] == 3 and r.pending == 0
+
+
+def test_shutdown_no_drain_sheds_queue_completes_inflight():
+    r = toy_router(n_replicas=1, n_slots=1, dispatch_depth=1)
+    reqs = [r.submit(img(i)) for i in range(3)]
+    assert reqs[0].replica_id is not None  # dispatched (depth 1)
+    r.shutdown(drain=False)
+    # dispatched work finished on stop; queued work shed with typed errors
+    assert reqs[0].done and reqs[0].error is None
+    np.testing.assert_array_equal(reqs[0].logits, [0.0, 0.0])
+    for q in reqs[1:]:
+        assert q.done and isinstance(q.error, RouterShutdown)
+    c = r.counters()["online"]
+    assert c["completed"] == 1 and c["shed"] == 2 and r.pending == 0
 
 
 # ----------------------------------------------------------- threaded smoke

@@ -46,6 +46,8 @@ DEFAULT_FILES = [
     "src/repro/serve/bcnn_engine.py",
     "src/repro/serve/router.py",
     "src/repro/serve/replica.py",
+    "src/repro/serve/autoscale.py",
+    "tests/test_soak.py",
     "src/repro/parallel/pipeline.py",
     "src/repro/parallel/bcnn_pipeline.py",
     "src/repro/parallel/bcnn_data_parallel.py",

@@ -9,7 +9,11 @@ fleet-router capacity, offline per-plan peak img/s) must stay within
 contracts, by contrast, are exact invariants — they must not grow at all.
 Records carrying the ``fused`` section (PR 7+) additionally re-assert the
 fusion claim: modeled boundary HBM bytes of every fused pair must be
-strictly below the unfused path's.
+strictly below the unfused path's. Records carrying the ``autoscale``
+section (PR 8+) re-assert the elasticity claims: one compile per replica
+EVER across the load step, scale events in both directions, and
+co-scheduled bulk keeping online p99 strictly below the bulk-monopoly
+cliff.
 
 Usage:  python tools/compare_bench.py                 # two newest records
         python tools/compare_bench.py OLD.json NEW.json
@@ -85,6 +89,37 @@ def compare(old: dict, new: dict) -> list[str]:
                 f"fused[{pair['fused_pair']}]: boundary bytes not reduced "
                 f"({pair['boundary_bytes_fused']} vs unfused "
                 f"{pair['boundary_bytes_unfused']})")
+
+    # elastic-fleet claims (records that carry them, PR 8+): elasticity
+    # must not leak compiles — every replica that EVER existed across the
+    # load step compiled exactly once — the step must actually have
+    # scaled in both directions, and co-scheduled bulk must keep the
+    # online tail strictly below the bulk-monopoly cliff
+    aut = new.get("autoscale")
+    if aut is not None:
+        if not all(c == 1 for c in aut["replica_compilations"]):
+            problems.append(
+                f"autoscale.replica_compilations: elasticity leaked "
+                f"compiles {aut['replica_compilations']} (contract is "
+                f"exactly 1 per replica, spawned or retired)")
+        if aut["n_scale_ups"] < 1 or aut["n_scale_downs"] < 1:
+            problems.append(
+                f"autoscale: load step did not scale in both directions "
+                f"({aut['n_scale_ups']} up(s), {aut['n_scale_downs']} "
+                f"down(s))")
+        co = aut["coscheduling"]
+        for mode in ("coscheduled", "monopoly"):
+            cc = co[mode]["replica_compilations"]
+            if not all(c == 1 for c in cc):
+                problems.append(f"autoscale.coscheduling[{mode}]: "
+                                f"compile contract broken {cc}")
+        if not (co["coscheduled"]["online_p99_ms"]
+                < co["monopoly"]["online_p99_ms"]):
+            problems.append(
+                f"autoscale.coscheduling: online p99 not protected — "
+                f"co-scheduled {co['coscheduled']['online_p99_ms']:.1f} ms "
+                f"vs monopoly {co['monopoly']['online_p99_ms']:.1f} ms at "
+                f"the same offered load")
     return problems
 
 
