@@ -753,6 +753,122 @@ def run_offline(verbose: bool = True, **kw) -> dict:
     return res
 
 
+def xnor_lm_curve(n_slots: int = 4, prompt_len: int = 8, max_new: int = 16,
+                  batches=(1, 2, 4, 8), reps: int = 2, seed: int = 0,
+                  smoke: bool = True) -> dict:
+    """Fig. 7-style prefill/decode throughput for the XNOR LM
+    (models/xnor_lm.py) on the slot engine — the second binary workload's
+    serving section of the perf record (BENCH_9+).
+
+    1. *Prefill*: full-sequence packed forward (``mode="xnor"`` — both
+       operands 1-bit) tokens/s vs batch; the streaming claim is flat
+       per-token time.
+    2. *Decode occupancy sweep*: the slot engine at occupancy
+       k = 1..n_slots, generated-tokens/s per step — occupancy is data,
+       so the jit cache must hold exactly ONE compilation across the
+       sweep AND across a weight hot-swap
+       (``XnorLMServeModel.swap_arrays``), re-measured post-swap.
+    """
+    from repro.configs import xnor_lm_tiny
+    from repro.models import xnor_lm
+
+    cfg = xnor_lm_tiny.SMOKE_CONFIG if smoke else xnor_lm_tiny.CONFIG
+    params = xnor_lm.init(cfg, jax.random.PRNGKey(seed))
+    packed = xnor_lm.fold(cfg, params)
+    rng = np.random.default_rng(seed)
+    seq = min(2 * prompt_len, cfg.max_len - 2)
+
+    fwd = jax.jit(lambda t: xnor_lm.forward_packed(cfg, packed, t,
+                                                   mode="xnor", path="xla"))
+    prefill = {"batch": [], "tok_per_s": [], "ms_per_seq": []}
+    for b in batches:
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, seq)),
+                           jnp.int32)
+        fwd(toks).block_until_ready()          # compile off the clock
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fwd(toks).block_until_ready()
+        dt = (time.perf_counter() - t0) / reps
+        prefill["batch"].append(b)
+        prefill["tok_per_s"].append(b * seq / dt)
+        prefill["ms_per_seq"].append(dt / b * 1e3)
+
+    eng, model = xnor_lm.make_serving_engine(cfg, packed, n_slots=n_slots,
+                                             mode="bw", path="xla")
+    eng.submit([1], max_new_tokens=1)
+    eng.run()                                  # the one compile, off the clock
+
+    def decode_sweep() -> dict:
+        out = {"occupancy": [], "step_ms": [], "tok_per_s": []}
+        for k in range(1, n_slots + 1):
+            dt = 0.0
+            steps = 0
+            for _ in range(reps):
+                for _ in range(k):
+                    prompt = rng.integers(0, cfg.vocab_size,
+                                          (prompt_len,)).tolist()
+                    eng.submit(prompt, max_new_tokens=max_new)
+                s0 = eng.steps_executed
+                t0 = time.perf_counter()
+                eng.run()
+                dt += time.perf_counter() - t0
+                steps += eng.steps_executed - s0
+            out["occupancy"].append(k)
+            out["step_ms"].append(dt / steps * 1e3)
+            out["tok_per_s"].append(k * max_new * reps / dt)
+        return out
+
+    decode = decode_sweep()
+    compiles = eng.step_cache_size
+    assert compiles == 1, (
+        f"XNOR LM decode step recompiled: jit cache size {compiles} across "
+        f"occupancies 1..{n_slots} (streaming contract is exactly 1)")
+
+    # weight hot-swap mid-benchmark: same executable, fresh weights
+    packed2 = xnor_lm.fold(cfg, xnor_lm.init(cfg, jax.random.PRNGKey(seed + 1)))
+    eng.swap_params(model.swap_arrays(packed2))
+    decode_post_swap = decode_sweep()
+    swap_compiles = eng.step_cache_size
+    assert swap_compiles == 1, (
+        f"weight hot-swap recompiled the LM decode step "
+        f"(jit cache size {swap_compiles})")
+
+    return {"config": {"d_model": cfg.d_model, "n_layers": cfg.n_layers,
+                       "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+                       "vocab_size": cfg.vocab_size,
+                       "param_count": cfg.param_count()},
+            "n_slots": n_slots, "prompt_len": prompt_len,
+            "max_new": max_new, "seq": seq,
+            "prefill": prefill, "decode": decode,
+            "decode_post_swap": decode_post_swap,
+            "step_compilations": compiles,
+            "swap_step_compilations": swap_compiles}
+
+
+def run_xnor_lm(verbose: bool = True, **kw) -> dict:
+    res = xnor_lm_curve(**kw)
+    if verbose:
+        c = res["config"]
+        print(f"XNOR LM serving (d={c['d_model']}, L={c['n_layers']}, "
+              f"{c['param_count']:,} params, XLA-on-CPU):")
+        pre = res["prefill"]
+        print(f"  prefill (mode=xnor, seq={res['seq']}):")
+        for b, tps, ms in zip(pre["batch"], pre["tok_per_s"],
+                              pre["ms_per_seq"]):
+            print(f"    batch {b:2d}: {tps:9.1f} tok/s  {ms:7.2f} ms/seq")
+        for tag, dec in (("decode", res["decode"]),
+                         ("decode post-swap", res["decode_post_swap"])):
+            print(f"  {tag} (mode=bw, slot engine, {res['n_slots']} slots):")
+            for k, ms, tps in zip(dec["occupancy"], dec["step_ms"],
+                                  dec["tok_per_s"]):
+                print(f"    {k}/{res['n_slots']} slots: step {ms:6.2f} ms  "
+                      f"{tps:8.1f} tok/s")
+        print(f"  jit compilations: {res['step_compilations']} before / "
+              f"{res['swap_step_compilations']} after hot-swap "
+              f"(contract: 1)")
+    return res
+
+
 def run(verbose: bool = True, measure: bool = True) -> dict:
     pa = paper_curves()
     res = {"paper": pa,
@@ -836,6 +952,11 @@ if __name__ == "__main__":
                          "recording the replica-count timeline, plus the "
                          "co-scheduled-bulk vs bulk-monopoly online-p99 "
                          "A/B")
+    ap.add_argument("--xnor-lm", action="store_true",
+                    help="measure the XNOR LM serving curves "
+                         "(models/xnor_lm.py on the slot engine): prefill "
+                         "tok/s vs batch and decode tok/s vs occupancy, "
+                         "with the one-compile + hot-swap contracts")
     ap.add_argument("--replicas", type=int, default=pc.FIG7_ROUTER_REPLICAS,
                     help="replica count for --router")
     ap.add_argument("--slots", type=int, default=pc.SERVE_N_SLOTS)
@@ -854,6 +975,8 @@ if __name__ == "__main__":
                          n_requests=args.requests)
     elif args.autoscale:
         out = run_autoscale()
+    elif args.xnor_lm:
+        out = run_xnor_lm(n_slots=args.slots)
     elif args.online:
         out = run_online(n_slots=args.slots, n_requests=args.requests)
     else:

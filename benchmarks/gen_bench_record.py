@@ -46,6 +46,7 @@ def build_record(pr: int, *, fast: bool = False) -> dict:
     autoscale = fig7.autoscale_curve(
         **({"max_replicas": 2, "burst_online": 8, "burst_bulk": 4,
             "ab_bulk": 8, "idle_pumps": 400} if fast else {}))
+    lm = fig7.xnor_lm_curve(reps=reps)
 
     return {
         "record": pr,
@@ -98,6 +99,22 @@ def build_record(pr: int, *, fast: bool = False) -> dict:
             "replica_compilations":
                 autoscale["load_step"]["replica_compilations"],
             "coscheduling": autoscale["coscheduling"],
+        },
+        # XNOR LM serving (models/xnor_lm.py on the slot engine, PR 9+):
+        # prefill/decode headline tok/s plus the zero-recompile contract
+        # held across the decode occupancy sweep AND a weight hot-swap
+        "xnor_lm": {
+            "config": lm["config"],
+            "n_slots": lm["n_slots"],
+            "prefill_peak_tok_per_s": max(lm["prefill"]["tok_per_s"]),
+            "decode_tok_per_s": lm["decode"]["tok_per_s"],
+            "decode_peak_tok_per_s": max(lm["decode"]["tok_per_s"]),
+            # full-occupancy step time relative to single-slot — the
+            # paper's flat-curve claim for the LM decode step
+            "occupancy_spread": (max(lm["decode"]["step_ms"])
+                                 / min(lm["decode"]["step_ms"])),
+            "step_compilations": lm["step_compilations"],
+            "swap_step_compilations": lm["swap_step_compilations"],
         },
         "router": {
             "plan": router["plan"],

@@ -23,17 +23,31 @@ ARCH_MODULES = {
 
 ARCH_NAMES = tuple(ARCH_MODULES)
 
+# Binarized LM workloads (models/xnor_lm.py) — registered apart from the
+# published-architecture table so the per-arch transformer smoke tests
+# (tests/test_arch_smoke.py iterate ARCH_NAMES) keep their contract, while
+# launch/serve.py can still resolve them by name.
+BINARY_LM_MODULES = {
+    "xnor-lm-tiny": "repro.configs.xnor_lm_tiny",
+}
+
+BINARY_LM_NAMES = tuple(BINARY_LM_MODULES)
+
 
 def _mod(name: str):
-    if name not in ARCH_MODULES:
-        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCH_MODULES)}")
-    return importlib.import_module(ARCH_MODULES[name])
+    if name in ARCH_MODULES:
+        return importlib.import_module(ARCH_MODULES[name])
+    if name in BINARY_LM_MODULES:
+        return importlib.import_module(BINARY_LM_MODULES[name])
+    raise KeyError(f"unknown arch {name!r}; known: "
+                   f"{sorted(ARCH_MODULES) + sorted(BINARY_LM_MODULES)}")
 
 
 def get_config(name: str, *, smoke: bool = False, quant: str = "none"):
     m = _mod(name)
     cfg = m.SMOKE_CONFIG if smoke else m.CONFIG
-    if quant != "none":
+    if quant != "none" and name not in BINARY_LM_MODULES:
+        # the XNOR LM is inherently binary; quant is a transformer knob
         cfg = cfg.with_(quant=quant)
     return cfg
 

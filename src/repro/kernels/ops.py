@@ -77,6 +77,17 @@ def xnor_matmul(a_words: jnp.ndarray, w_words: jnp.ndarray, *, k: int,
         interpret = not _on_tpu()
     lead = a_words.shape[:-1]
     kw = a_words.shape[-1]
+    if w_words.shape[-1] != kw:
+        raise ValueError(
+            f"packed word-count mismatch: activations carry {kw} int32 "
+            f"words, weights {w_words.shape[-1]} — both operands must be "
+            f"packed over the same reduction axis (32 bits/word)")
+    if bitpack.packed_len(k) != kw:
+        raise ValueError(
+            f"in_features k={k} needs ceil(k/32)={bitpack.packed_len(k)} "
+            f"packed int32 words, got {kw} — pack with core/bitpack.py "
+            f"(pack_pm1 / pad_to_pack+pack_bits pad the last <32 bits; any "
+            f"other word count silently mis-counts agreements)")
     a2 = a_words.reshape(-1, kw)
     n = w_words.shape[0]
 
@@ -283,6 +294,17 @@ def binary_weight_matmul(a: jnp.ndarray, w_words: jnp.ndarray, *, k: int,
     lead = a.shape[:-1]
     kk = a.shape[-1]
     n, kw = w_words.shape
+    if k != kk:
+        raise ValueError(
+            f"k={k} disagrees with the activations' in_features {kk}; pass "
+            f"k = a.shape[-1] (the true reduction length)")
+    if bitpack.packed_len(kk) != kw:
+        raise ValueError(
+            f"in_features {kk} needs ceil({kk}/32)={bitpack.packed_len(kk)} "
+            f"packed weight words, got {kw} — weights must be packed along "
+            f"a 32-bit-aligned reduction axis (kernels/ops.py::pack_weights; "
+            f"a ragged K < kw*32 is fine: the activation zero-padding "
+            f"neutralizes the pad weight bits)")
     a2 = a.reshape(-1, kk)
     # pad K to the packed length (activation zeros neutralize pad weight bits)
     if kk < kw * bitpack.PACK:

@@ -21,7 +21,10 @@ two halves:
 
 Hysteresis: scale up when the windowed mean pressure exceeds
 ``up_watermark``; scale down when it falls below ``down_watermark``;
-``cooldown_s`` separates consecutive scale events. ``AutoscaleConfig``
+``cooldown_s`` separates consecutive scale events. One exception outranks
+both gates: a fleet below ``min_replicas`` (a replica worker died —
+``serve/replica.py`` death detection) respawns immediately, cooldown or
+not, because the floor is a capacity guarantee rather than a load policy. ``AutoscaleConfig``
 REQUIRES ``down_watermark < up_watermark / 2``, which makes oscillation on
 a constant load impossible: after an up-scale at ``n`` replicas (pressure
 ``P/n > up``), the new pressure ``P/(n+1) > up·n/(n+1) ≥ up/2 > down``
@@ -180,6 +183,13 @@ class FleetAutoscaler:
     def _decide(self, now: float, snap: dict) -> int:
         miss = (self._windowed_miss_frac(snap)
                 if self.config.miss_frac_hi is not None else None)
+        # min_replicas is a FLOOR, not a watermark decision: a fleet that
+        # lost a replica to a worker death (serve/replica.py death
+        # detection) is under-capacity NOW, so the respawn bypasses both
+        # the pressure window and the cooldown gate — the fault-injection
+        # soak (tests/test_soak.py) pins this path
+        if snap["n_replicas"] < self.config.min_replicas:
+            return +1
         if (self._last_event_t is not None
                 and now - self._last_event_t < self.config.cooldown_s):
             return 0

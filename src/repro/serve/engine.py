@@ -21,6 +21,15 @@ engine (``serve/bcnn_engine.py``) uses, so admission semantics are tested
 once (tests/test_slots.py). tests/test_serve.py checks continuity
 invariants (every request completes, outputs independent of co-tenants in
 the batch).
+
+The model behind the step is pluggable: the engine talks to a small
+adapter (``init_state`` / ``decode_step`` / ``reset_slot``) rather than to
+``models/transformer.py`` directly. The default adapter wraps the dense/
+moe/ssm/audio transformer families; `models/xnor_lm.py::XnorLMServeModel`
+plugs the packed binarized LM into the same slots, inheriting the
+zero-recompile contract (``step_cache_size`` stays 1 across any occupancy)
+and the weight hot-swap contract (``swap_params`` — same-shaped params hit
+the same compiled executable, tests/test_xnor_lm.py).
 """
 from __future__ import annotations
 
@@ -35,14 +44,45 @@ from repro.models import transformer
 from repro.serve.slots import SlotScheduler
 
 
+class TransformerServeModel:
+    """Default model adapter: the `models/transformer.py` families."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.family = cfg.family
+
+    def init_state(self, n_slots: int, max_len: int):
+        return transformer.init_serve_state(self.cfg, n_slots, max_len)
+
+    def decode_step(self, params, state, tokens):
+        return transformer.decode_step(self.cfg, params, state, tokens)
+
+    def encode(self, params, frames):
+        return transformer._encode(self.cfg, params, frames)
+
+    def reset_slot(self, state, i: int, n_slots: int):
+        """Zero slot i's cache/recurrent state (host-side, O(slot))."""
+
+        def zero_slot(a):
+            if a.ndim >= 2 and a.shape[1] == n_slots:        # (L, B, …)
+                return a.at[:, i].set(0)
+            if a.ndim >= 1 and a.shape[0] == n_slots:        # (B, …)
+                return a.at[i].set(0)
+            return a
+        caches = jax.tree.map(zero_slot, state.caches)
+        return transformer.ServeState(caches, state.enc_kv, state.length)
+
+
 class ServingEngine:
     def __init__(self, cfg, params, *, n_slots: int = 8, max_len: int = 512,
                  eos_id: int = -1,
-                 sampler: Callable[[jnp.ndarray], jnp.ndarray] | None = None):
+                 sampler: Callable[[jnp.ndarray], jnp.ndarray] | None = None,
+                 model=None):
         self.cfg, self.params = cfg, params
         self.n_slots, self.max_len, self.eos = n_slots, max_len, eos_id
-        self.state = transformer.init_serve_state(cfg, n_slots, max_len)
-        if cfg.family == "audio":
+        self.model = model if model is not None else TransformerServeModel(cfg)
+        self.state = self.model.init_state(n_slots, max_len)
+        if self.model.family == "audio":
             # per-slot encoder cross-K/V, filled at admission
             dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
             shape = (cfg.n_layers, n_slots, cfg.encoder_seq,
@@ -58,8 +98,7 @@ class ServingEngine:
         self._steps = 0
 
         def step(params, state, tokens):
-            logits, state = transformer.decode_step(cfg, params, state,
-                                                    tokens)
+            logits, state = self.model.decode_step(params, state, tokens)
             nxt = (jnp.argmax(logits[:, -1, :], axis=-1) if sampler is None
                    else sampler(logits[:, -1, :]))
             return nxt.astype(jnp.int32), state
@@ -99,6 +138,33 @@ class ServingEngine:
     def steps_executed(self) -> int:
         return self._steps
 
+    @property
+    def step_cache_size(self) -> int:
+        """Distinct compilations of the jit'd decode step. The
+        zero-recompile contract (occupancy is data, weight swaps reuse the
+        executable) is: this stays 1 after the first step."""
+        return int(self._step._cache_size())
+
+    def swap_params(self, new_params) -> None:
+        """Weight hot-swap with ZERO recompiles: replace the step's params
+        with an identically-structured/shaped/dtyped replacement (for the
+        packed XNOR LM, the array tuple from
+        `models/xnor_lm.py::XnorLMServeModel.swap_arrays`). Takes effect on
+        the next step; in-flight slots continue on the new weights, which
+        is the single-engine analogue of the fleet's epoch-stamped rolling
+        swap."""
+        ol, ot = jax.tree_util.tree_flatten(self.params)
+        nl, nt = jax.tree_util.tree_flatten(new_params)
+        if ot != nt:
+            raise ValueError(f"params tree structure differs: {ot} != {nt}")
+        for i, (a, b) in enumerate(zip(ol, nl)):
+            if tuple(a.shape) != tuple(b.shape) or a.dtype != b.dtype:
+                raise ValueError(
+                    f"params leaf {i}: shape/dtype mismatch "
+                    f"{a.shape}/{a.dtype} vs {b.shape}/{b.dtype} — a swap "
+                    f"must preserve every leaf's shape and dtype")
+        self.params = new_params
+
     # ------------------------------------------------------------- internals
     def _admit(self) -> bool:
         for i, req in self.sched.admit():
@@ -118,14 +184,7 @@ class ServingEngine:
 
     def _reset_slot(self, state, i: int):
         """Zero slot i's cache/recurrent state (host-side surgery, O(slot))."""
-        def zero_slot(a):
-            if a.ndim >= 2 and a.shape[1] == self.n_slots:   # (L, B, …)
-                return a.at[:, i].set(0)
-            if a.ndim >= 1 and a.shape[0] == self.n_slots:   # (B, …)
-                return a.at[i].set(0)
-            return a
-        caches = jax.tree.map(zero_slot, state.caches)
-        return transformer.ServeState(caches, state.enc_kv, state.length)
+        return self.model.reset_slot(state, i, self.n_slots)
 
     def _tick(self, results: dict[int, list[int]]) -> None:
         # build the (n_slots, 1) token vector: prompt feed or last output

@@ -28,6 +28,16 @@ Threading contract: ``enqueue``/``request_swap``/``stop`` may be called
 from any thread; everything else that touches the engine runs on the
 worker thread (``threaded=True``) or inside ``pump()`` (``threaded=False``
 — the mode the injected-clock unit tests drive deterministically).
+
+Death detection (the fault-injection soak hook, tests/test_soak.py): if
+the worker crashes — a real exception out of ``_process``, or one forced
+by ``inject_fault()`` — the replica marks itself dead (``alive`` False),
+conservatively treats every accepted-but-unfinished work item as an
+*orphan*, fails pending swap tickets, and reports the orphans through the
+``on_death(replica, orphans)`` callback so the router can requeue them
+(no request is silently lost) and the autoscaler can respawn capacity
+(``serve/autoscale.py`` treats a fleet below ``min_replicas`` as an
+immediate, cooldown-exempt scale-up).
 """
 from __future__ import annotations
 
@@ -95,10 +105,13 @@ class EngineReplica:
     def __init__(self, engine, *, replica_id: int = 0, threaded: bool = True,
                  on_done: Callable[["EngineReplica", Any, np.ndarray, int],
                                    None] | None = None,
+                 on_death: Callable[["EngineReplica", list], None]
+                 | None = None,
                  epoch: int = 0):
         self.engine = engine
         self.id = replica_id
         self.on_done = on_done
+        self.on_death = on_death
         self._inbox: deque[Any] = deque()     # work items + _SwapCmds, FIFO
         self._lock = threading.Lock()
         self._wake = threading.Condition(self._lock)
@@ -106,6 +119,9 @@ class EngineReplica:
         self._served = 0
         self._epoch = epoch
         self._stopping = False
+        self._fault = False                   # armed by inject_fault()
+        self._dead = False
+        self._death_error: BaseException | None = None
         self._threaded = threaded
         self._thread: threading.Thread | None = None
         if threaded:
@@ -141,14 +157,36 @@ class EngineReplica:
         """The engine's zero-recompile counter (contract: stays 1)."""
         return self.engine.step_cache_size
 
+    @property
+    def alive(self) -> bool:
+        """False once the worker died (crash or ``inject_fault``). A dead
+        replica rejects new work; its orphans were already reported via
+        ``on_death``."""
+        with self._lock:
+            return not self._dead
+
+    @property
+    def death_error(self) -> BaseException | None:
+        return self._death_error
+
+    def inject_fault(self) -> None:
+        """Arm a deterministic worker death: the NEXT processing pass
+        raises before touching any item — the whole accepted backlog
+        becomes the orphan set, exactly the worst-case mid-traffic thread
+        death the fault-injection soak tier replays."""
+        with self._wake:
+            self._fault = True
+            self._wake.notify()
+
     def enqueue(self, item: Any) -> None:
         """Hand one work item (``item.image`` is the input — a single
         ``(H, W, C)`` image or a ``(k, H, W, C)`` bulk micro-chunk) to the
         replica. Thread-safe; the worker picks it up at its next
         iteration."""
         with self._wake:
-            if self._stopping:
-                raise RuntimeError(f"replica {self.id} is stopped")
+            if self._stopping or self._dead:
+                raise RuntimeError(f"replica {self.id} is "
+                                   f"{'dead' if self._dead else 'stopped'}")
             self._inbox.append(item)
             self._inflight += _item_size(item)
             self._wake.notify()
@@ -160,8 +198,9 @@ class EngineReplica:
         idle engine. Returns a ``SwapTicket`` to wait on."""
         ticket = SwapTicket()
         with self._wake:
-            if self._stopping:
-                raise RuntimeError(f"replica {self.id} is stopped")
+            if self._stopping or self._dead:
+                raise RuntimeError(f"replica {self.id} is "
+                                   f"{'dead' if self._dead else 'stopped'}")
             self._inbox.append(_SwapCmd(new_packed, ticket))
             self._wake.notify()
         return ticket
@@ -183,23 +222,64 @@ class EngineReplica:
             raise RuntimeError("pump() is for threaded=False replicas; "
                                "a threaded replica's worker owns the engine")
         with self._lock:
+            if self._dead:
+                return 0
             items = list(self._inbox)
             self._inbox.clear()
-        return self._process(items)
+        return self._run(items)
 
     # ------------------------------------------------------------- internals
     def _loop(self) -> None:
         while True:
             with self._wake:
-                while not self._inbox and not self._stopping:
+                while (not self._inbox and not self._stopping
+                        and not self._fault):
                     self._wake.wait()
-                if not self._inbox and self._stopping:
+                if self._dead or (not self._inbox and self._stopping):
                     return
                 items = list(self._inbox)
                 self._inbox.clear()
-            self._process(items)
+            self._run(items)
+            if self._death_error is not None:
+                return                        # worker died; loop ends here
 
-    def _process(self, items: list) -> int:
+    def _run(self, items: list) -> int:
+        """One processing pass with crash containment: a raise out of
+        ``_process`` (or the armed ``inject_fault``) kills the worker —
+        every accepted-but-unfinished item becomes an orphan handed to
+        ``on_death`` for router-side requeue."""
+        done: list = []
+        try:
+            if self._fault:
+                raise RuntimeError(
+                    f"injected fault: replica {self.id} worker died")
+            return self._process(items, done)
+        except BaseException as e:
+            self._die(e, items, done)
+            return len(done)
+
+    def _die(self, error: BaseException, items: list, done: list) -> None:
+        done_ids = {id(it) for it in done}
+        with self._wake:
+            self._dead = True
+            leftovers = list(self._inbox)     # raced in after the drain
+            self._inbox.clear()
+            self._wake.notify_all()
+        orphans = []
+        for it in list(items) + leftovers:
+            if isinstance(it, _SwapCmd):
+                if not it.ticket.done:       # executed pre-crash: keep result
+                    it.ticket._resolve(RuntimeError(
+                        f"replica {self.id} died before the swap: {error!r}"))
+            elif id(it) not in done_ids:
+                orphans.append(it)
+        with self._lock:
+            self._inflight -= sum(_item_size(i) for i in orphans)
+        self._death_error = error
+        if self.on_death is not None:
+            self.on_death(self, orphans)
+
+    def _process(self, items: list, done: list | None = None) -> int:
         """Run the FIFO item stream: consecutive work items are flushed
         through the engine together (they share steps, exactly like
         co-arriving requests on a lone engine); a swap command forms an
@@ -208,7 +288,7 @@ class EngineReplica:
         batch: list = []
         for item in items:
             if isinstance(item, _SwapCmd):
-                completed += self._flush(batch)
+                completed += self._flush(batch, done)
                 batch = []
                 try:
                     self.engine.swap_packed(item.packed)
@@ -220,9 +300,9 @@ class EngineReplica:
                     item.ticket._resolve()
             else:
                 batch.append(item)
-        return completed + self._flush(batch)
+        return completed + self._flush(batch, done)
 
-    def _flush(self, batch: list) -> int:
+    def _flush(self, batch: list, done: list | None = None) -> int:
         if not batch:
             return 0
         # one engine rid per image; a multi-image chunk fans out into
@@ -244,4 +324,8 @@ class EngineReplica:
                 logits = (out[item_rids[0]] if item.image.ndim == 3
                           else np.stack([out[r] for r in item_rids]))
                 self.on_done(self, item, logits, epoch)
+                if done is not None:
+                    done.append(item)
+        elif done is not None:
+            done.extend(item for item, _ in rids)
         return len(batch)

@@ -46,6 +46,13 @@ million-user tier the ROADMAP names:
   ``serve/autoscale.py::FleetAutoscaler`` drive both between hysteresis
   watermarks — on a controller thread when ``threaded``, one step per
   ``pump()`` otherwise;
+* **replica death containment** — a crashed worker
+  (``serve/replica.py`` death detection, incl. ``inject_fault``) reports
+  its orphaned requests through ``on_death``; the router retires the
+  corpse, requeues every orphan at its original priority/deadline
+  (``replica_deaths`` counts the events, the ledger never moves — no
+  request is silently lost), and the autoscaler's ``min_replicas`` floor
+  respawns capacity without waiting out the cooldown;
 * **typed shedding on shutdown** — ``shutdown(drain=True)`` serves the
   backlog until its timeout, then sheds the remainder with a
   ``RouterShutdown`` (a ``RouterOverload``) raised from each victim's
@@ -281,9 +288,10 @@ class Router:
         self._current_packed = packed
         self._make_engine = engine_factory
         self._warm_on_scale = warm_on_scale
+        self._replica_deaths = 0
         self._replicas = [
             EngineReplica(e, replica_id=i, threaded=threaded,
-                          on_done=self._on_done)
+                          on_done=self._on_done, on_death=self._on_death)
             for i, e in enumerate(engines)]
         self._next_replica_id = len(self._replicas)
         self._bulk_inflight = {r.id: 0 for r in self._replicas}
@@ -374,6 +382,14 @@ class Router:
         return self._autoscaler
 
     @property
+    def replica_deaths(self) -> int:
+        """Worker deaths handled so far (orphans requeued, corpse retired
+        into ``replicas_ever``). The fault-injection soak asserts this
+        moved AND that the ledger still closed."""
+        with self._lock:
+            return self._replica_deaths
+
+    @property
     def class_names(self) -> tuple[str, ...]:
         return tuple(c.name for c in self.classes)
 
@@ -450,7 +466,8 @@ class Router:
                 epoch = self._fleet_epoch
             rep = EngineReplica(engine, replica_id=rid,
                                 threaded=self.threaded,
-                                on_done=self._on_done, epoch=epoch)
+                                on_done=self._on_done,
+                                on_death=self._on_death, epoch=epoch)
             with self._lock:
                 self._replicas.append(rep)
                 self._bulk_inflight[rep.id] = 0
@@ -727,7 +744,7 @@ class Router:
                         parked.append(entry)
                         continue
                     live = [r for r in self._replicas
-                            if r.id not in self._paused]
+                            if r.id not in self._paused and r.alive]
                     rep = self._pick_replica(live, req) if live else None
                     if rep is None:
                         parked.append(entry)
@@ -782,6 +799,40 @@ class Router:
                     self._deadline_missed += 1
         req._event.set()
         self._dispatch()                # a slot's worth of capacity freed
+
+    def _on_death(self, rep: EngineReplica, orphans: list) -> None:
+        """Replica death callback (``serve/replica.py::EngineReplica._die``,
+        runs on the dying worker's thread in threaded mode, on the pump
+        caller otherwise): retire the corpse into ``replicas_ever``, then
+        requeue every orphaned request at its original class priority with
+        its ORIGINAL submit-time deadline — a re-run request is late by
+        the wall time it already burned, not forgiven it. No ledger column
+        moves (the request was neither completed nor shed; it is simply
+        queued again), so submitted == completed + shed + pending keeps
+        closing and the fault-injection soak can assert zero silent loss.
+        The autoscaler notices the shrunken fleet via ``load_snapshot`` and
+        respawns capacity (``min_replicas`` floor, cooldown-exempt)."""
+        with self._lock:
+            if rep in self._replicas:
+                self._replicas.remove(rep)
+                self._retired.append(rep)
+                self._replica_deaths += 1
+            self._paused.discard(rep.id)
+            self._bulk_inflight.pop(rep.id, None)
+            for req in orphans:
+                if req.done:
+                    continue            # defensive: finished ≠ orphan
+                k = _n_images(req.image)
+                req.t_dispatch = None
+                req.replica_id = None
+                key = (req.cls.priority,
+                       req.t_submit + req.cls.deadline_s
+                       if req.cls.deadline_s is not None else float("inf"),
+                       self._seq)
+                self._seq += 1
+                heapq.heappush(self._heap, (*key, req))
+                self._queued_images += k
+        self._dispatch()                # survivors absorb the orphans
 
     def _shed_queue(self, reason: str) -> int:
         """Fail every still-queued request with a typed ``RouterShutdown``

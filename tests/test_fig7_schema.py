@@ -205,6 +205,39 @@ def test_bench_record_schema():
                 assert all(c == 1 for c in arm["replica_compilations"])
             assert co["coscheduled"]["online_p99_ms"] \
                 < co["monopoly"]["online_p99_ms"]
+        # records from the XNOR LM PR onward carry the binary-LM serving
+        # section: prefill/decode headline tok/s and the decode step's
+        # one-compile contract held across the occupancy sweep AND across
+        # a weight hot-swap (models/xnor_lm.py on serve/engine.py)
+        if rec["record"] >= 9:
+            assert "xnor_lm" in rec, path.name
+            lm = rec["xnor_lm"]
+            assert {"d_model", "n_layers", "n_heads", "d_ff", "vocab_size",
+                    "param_count"} <= lm["config"].keys()
+            assert lm["config"]["d_model"] % 32 == 0     # bit-packable
+            assert lm["config"]["d_ff"] % 32 == 0
+            assert lm["prefill_peak_tok_per_s"] > 0
+            assert lm["decode_peak_tok_per_s"] > 0
+            assert len(lm["decode_tok_per_s"]) == lm["n_slots"]
+            assert lm["occupancy_spread"] >= 1.0
+            assert lm["step_compilations"] == 1
+            assert lm["swap_step_compilations"] == 1
+
+
+@pytest.mark.slow
+def test_xnor_lm_schema(fig7):
+    """`--xnor-lm` artifact: prefill + decode curves with the compile
+    contracts embedded, JSON-round-trippable for the `--json` path."""
+    res = _roundtrip(fig7, fig7.xnor_lm_curve(
+        n_slots=2, prompt_len=4, max_new=4, batches=(1, 2), reps=1))
+    assert {"config", "prefill", "decode", "decode_post_swap"} <= res.keys()
+    pre = res["prefill"]
+    assert len(pre["batch"]) == len(pre["tok_per_s"]) == 2
+    for dec in (res["decode"], res["decode_post_swap"]):
+        assert dec["occupancy"] == [1, 2]
+        assert all(t > 0 for t in dec["tok_per_s"])
+    assert res["step_compilations"] == 1
+    assert res["swap_step_compilations"] == 1
 
 
 def test_paper_curves_jsonable(fig7):

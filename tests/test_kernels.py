@@ -128,3 +128,39 @@ def test_flash_attention_bf16():
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32),
                                rtol=3e-2, atol=3e-2)
+
+
+# --------------------------------------------------- wrapper shape guardrails
+
+def test_xnor_matmul_rejects_mispacked_weights():
+    """A k that doesn't match the packed word count must fail loudly at
+    trace time — a silent mismatch would read garbage pad bits."""
+    a_words = bitpack.pack_pm1(jnp.ones((4, 64), jnp.float32))
+    w_words = bitpack.pack_pm1(jnp.ones((8, 96), jnp.float32))
+    with pytest.raises(ValueError, match="packed"):
+        ops.xnor_matmul(a_words, w_words, k=64)
+    with pytest.raises(ValueError, match="packed int32 words"):
+        ops.xnor_matmul(a_words, bitpack.pack_pm1(
+            jnp.ones((8, 64), jnp.float32)), k=96)
+
+
+def test_binary_weight_matmul_rejects_mismatched_k():
+    a = jnp.ones((4, 64), jnp.float32)
+    w_words = bitpack.pack_pm1(jnp.ones((8, 64), jnp.float32))
+    with pytest.raises(ValueError, match="disagrees with the activations"):
+        ops.binary_weight_matmul(a, w_words, k=32)
+    with pytest.raises(ValueError, match="packed weight words"):
+        ops.binary_weight_matmul(jnp.ones((4, 128), jnp.float32),
+                                 w_words, k=128)
+
+
+@pytest.mark.parametrize("k", [40, 70, 97])
+def test_binary_weight_matmul_padded_k(k):
+    """Ragged K (< kw*32): zero-padded activations neutralize the pad
+    weight bits, so the padded path stays oracle-exact."""
+    rng = np.random.default_rng(k)
+    a = jnp.asarray(_rand_pm1(rng, (5, k)))
+    w_words = bitpack.pack_pm1(jnp.asarray(_rand_pm1(rng, (7, k))))
+    y = ops.binary_weight_matmul(a, w_words, k=k)
+    y_ref = ref.binary_weight_matmul_ref(a, w_words, k)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))

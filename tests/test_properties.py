@@ -393,3 +393,56 @@ def test_autoscaler_never_oscillates_on_constant_load(load, slots_per, n0,
     assert 1 <= fleet.n <= 8
     # and it converged: the tail of the run is event-free
     assert all(e.t < 150.0 for e in auto.events)
+
+
+# ------------------------------------------------------------------- xnor lm
+
+from repro.kernels import ops as kops, ref as kref  # noqa: E402
+
+
+@SET
+@given(st.integers(1, 96), st.integers(1, 8), st.integers(1, 5),
+       st.integers(0, 2 ** 31 - 1))
+def test_blinear_train_vs_packed_parity(in_f, out_f, batch, seed):
+    """`core/blinear.py::apply_train` ≡ fold + ``apply_packed`` on every
+    binarize decision, for any (in, out, batch) shape — including ragged
+    in_f (the packed pad bits cancel). BN stats are constructed
+    sign-exact (integer means, beta=0, ±gamma) so the f32 train-side sign
+    is the same mathematical integer compare the folded eq. 8 threshold
+    makes — no boundary flakes, the same standard the LM parity tier pins
+    end to end (tests/test_xnor_lm.py)."""
+    rng = np.random.default_rng(seed)
+    a = rng.choice(np.array([-1.0, 1.0], np.float32), size=(batch, in_f))
+    p = blinear.BLinearParams(
+        w=jnp.asarray(rng.uniform(-1, 1, (out_f, in_f)), jnp.float32),
+        bn_mean=jnp.asarray(
+            rng.integers(-in_f, in_f + 1, (out_f,)), jnp.float32),
+        bn_var=jnp.asarray(rng.choice([0.25, 1.0, 4.0], (out_f,)),
+                           jnp.float32),
+        bn_gamma=jnp.asarray(rng.choice([-1.0, 1.0], (out_f,))
+                             * rng.uniform(0.5, 2.0, (out_f,)), jnp.float32),
+        bn_beta=jnp.zeros((out_f,), jnp.float32))
+    train = blinear.apply_train(p, jnp.asarray(a), binarize_out=True)
+    bits = blinear.apply_packed(blinear.fold(p),
+                                bitpack.pack_pm1(jnp.asarray(a)))
+    packed = bitpack.decode_pm1(bits)
+    np.testing.assert_array_equal(np.asarray(train), np.asarray(packed))
+
+
+@SET
+@given(st.integers(1, 6), st.integers(1, 130), st.integers(1, 9),
+       st.booleans(), st.integers(0, 2 ** 31 - 1))
+def test_binary_weight_matmul_matches_oracle(m, k, n, scaled, seed):
+    """The weight-only decode kernel vs its `kernels/ref.py` oracle over
+    arbitrary shapes — K deliberately spans ragged/padded reduction
+    lengths (k % 32 ≠ 0 exercises the zero-pad path)."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(-3, 4, (m, k)), jnp.float32)
+    w_words = bitpack.pack_pm1(jnp.asarray(
+        rng.choice(np.array([-1.0, 1.0], np.float32), size=(n, k))))
+    scale = (jnp.asarray(rng.uniform(0.5, 2.0, (n,)), jnp.float32)
+             if scaled else None)
+    y = kops.binary_weight_matmul(a, w_words, k=k, scale=scale)
+    y_ref = kref.binary_weight_matmul_ref(a, w_words, k, scale)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-6, atol=1e-6)

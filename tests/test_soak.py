@@ -23,6 +23,8 @@ What a full run must hold FLAT or CLOSED, every iteration:
   that are bit-exact for its stamped weight epoch or a typed
   ``RouterOverload``-family error. None vanish.
 """
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -127,3 +129,102 @@ def test_soak_elastic_fleet_flat_caches_bounded_rss_closed_ledger():
     assert steady[-1] - steady[0] < RSS_TOTAL, \
         f"grew {(steady[-1] - steady[0]) / 1e6:.1f} MB post-warmup"
     router.shutdown()
+
+
+def test_fault_injection_replica_death_respawn_closed_ledger():
+    """Kill a replica worker mid-traffic (`serve/replica.py::
+    EngineReplica.inject_fault`): its orphaned requests requeue at their
+    original priority/deadline, the autoscaler respawns the fleet to
+    ``min_replicas`` on its next tick (cooldown-exempt floor), the ledger
+    closes exactly, and every request — orphans included — finishes with
+    logits bit-exact to the packed reference. No request is silently lost."""
+    clock = StepClock(dt=1e-3)
+    packed = bcnn.fold_model(bcnn.init(jax.random.PRNGKey(0)))
+    router = Router.from_packed(
+        packed, n_replicas=2, n_slots=2, path="xla", threaded=False,
+        clock=clock,
+        # huge cooldown: only the min_replicas floor can explain a respawn
+        autoscale=AutoscaleConfig(min_replicas=2, max_replicas=3,
+                                  up_watermark=50.0, down_watermark=1.0,
+                                  window_s=0.02, cooldown_s=1e9,
+                                  interval_s=0.001))
+    rng = np.random.default_rng(3)
+    pool = rng.random((8, 32, 32, 3)).astype(np.float32)
+    ref = np.asarray(bcnn.forward_packed(packed, jnp.asarray(pool),
+                                         path="xla"))
+
+    reqs = [router.submit(im) for im in pool[:4]]
+    router.pump()                       # first wave served, slots warm
+    reqs += [router.submit(im) for im in pool[4:]]
+    victim = router.replicas[0]
+    victim.inject_fault()
+    router.pump()                       # worker dies mid-traffic here
+    assert router.replica_deaths == 1
+    assert not victim.alive
+    assert isinstance(victim.death_error, RuntimeError)
+    assert router.n_replicas == 1       # corpse retired, not yet respawned
+    with pytest.raises(RuntimeError, match="dead"):
+        victim.enqueue(reqs[0])         # a corpse rejects new work loudly
+
+    router.run_until_idle()             # survivor absorbs the orphans
+    router.pump()                       # next autoscaler tick: floor respawn
+    assert router.n_replicas == 2, "autoscaler must respawn to min_replicas"
+    assert router.autoscaler.n_scale_ups == 1
+
+    # the respawned replica takes traffic too
+    reqs += [router.submit(im) for im in pool]
+    router.run_until_idle()
+
+    assert all(r.done and r.error is None for r in reqs), \
+        "a replica death must never silently lose a request"
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(r.logits), ref[i % len(pool)])
+    c = router.counters()["online"]
+    assert c["submitted"] == c["completed"] + c["shed"] == 16
+    assert c["shed"] == 0 and router.pending == 0
+    # the dead replica stays in the compile-contract audit set, still at
+    # exactly one compile — dying must not cost or leak an executable
+    ever = router.replicas_ever
+    assert victim in ever and len(ever) == 3
+    assert all(rep.step_cache_size == 1 for rep in ever)
+    router.shutdown()
+
+
+def test_fault_injection_threaded_replica_death():
+    """The same death path with real worker threads: the victim's thread
+    exits, the router requeues its orphans, the controller thread respawns
+    capacity, and every submitted request completes."""
+    packed = bcnn.fold_model(bcnn.init(jax.random.PRNGKey(0)))
+    router = Router.from_packed(
+        packed, n_replicas=2, n_slots=2, path="xla", threaded=True,
+        autoscale=AutoscaleConfig(min_replicas=2, max_replicas=3,
+                                  up_watermark=50.0, down_watermark=1.0,
+                                  window_s=0.02, cooldown_s=1e9,
+                                  interval_s=0.002))
+    try:
+        rng = np.random.default_rng(4)
+        pool = rng.random((6, 32, 32, 3)).astype(np.float32)
+        ref = np.asarray(bcnn.forward_packed(packed, jnp.asarray(pool),
+                                             path="xla"))
+        first = [router.submit(im) for im in pool]
+        for r in first:
+            r.wait(timeout=60.0)
+        victim = router.replicas[0]
+        victim.inject_fault()
+        deadline = time.monotonic() + 30.0
+        while router.replica_deaths < 1:
+            assert time.monotonic() < deadline, "death never detected"
+            time.sleep(0.002)
+        while router.n_replicas < 2:
+            assert time.monotonic() < deadline, "no respawn"
+            time.sleep(0.002)
+        reqs = [router.submit(im) for im in pool]
+        for i, r in enumerate(reqs):
+            np.testing.assert_array_equal(np.asarray(r.wait(timeout=60.0)),
+                                          ref[i])
+        assert not victim.alive
+        c = router.counters()["online"]
+        assert c["submitted"] == c["completed"] + c["shed"] == 12
+        assert c["shed"] == 0
+    finally:
+        router.shutdown()

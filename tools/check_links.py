@@ -57,6 +57,11 @@ DEFAULT_FILES = [
     "src/repro/core/bcnn_artifact.py",
     "src/repro/launch/train_bcnn.py",
     "benchmarks/fig7.py",
+    "src/repro/models/xnor_lm.py",
+    "src/repro/core/blinear.py",
+    "src/repro/configs/xnor_lm_tiny.py",
+    "src/repro/launch/serve.py",
+    "tests/test_xnor_lm.py",
 ]
 
 MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")

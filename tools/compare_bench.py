@@ -13,7 +13,9 @@ strictly below the unfused path's. Records carrying the ``autoscale``
 section (PR 8+) re-assert the elasticity claims: one compile per replica
 EVER across the load step, scale events in both directions, and
 co-scheduled bulk keeping online p99 strictly below the bulk-monopoly
-cliff.
+cliff. Records carrying the ``xnor_lm`` section (PR 9+) gate the binary
+LM's prefill/decode headline tok/s and its one-compile-across-hot-swap
+contract.
 
 Usage:  python tools/compare_bench.py                 # two newest records
         python tools/compare_bench.py OLD.json NEW.json
@@ -120,6 +122,26 @@ def compare(old: dict, new: dict) -> list[str]:
                 f"co-scheduled {co['coscheduled']['online_p99_ms']:.1f} ms "
                 f"vs monopoly {co['monopoly']['online_p99_ms']:.1f} ms at "
                 f"the same offered load")
+    # XNOR LM serving claims (records that carry them, PR 9+): decode and
+    # prefill headline throughput hold the noise floor against the prior
+    # record, and the LM decode step's zero-recompile contract — one
+    # compile across the occupancy sweep AND across the weight hot-swap —
+    # is exact
+    lm = new.get("xnor_lm")
+    if lm is not None:
+        lm_old = old.get("xnor_lm")
+        if lm_old is not None:
+            gate("xnor_lm.decode_peak_tok_per_s",
+                 lm_old["decode_peak_tok_per_s"],
+                 lm["decode_peak_tok_per_s"])
+            gate("xnor_lm.prefill_peak_tok_per_s",
+                 lm_old["prefill_peak_tok_per_s"],
+                 lm["prefill_peak_tok_per_s"])
+        for field in ("step_compilations", "swap_step_compilations"):
+            if lm[field] != 1:
+                problems.append(
+                    f"xnor_lm.{field}: LM decode step compile contract "
+                    f"broken ({lm[field]} != 1)")
     return problems
 
 
