@@ -869,6 +869,93 @@ def run_xnor_lm(verbose: bool = True, **kw) -> dict:
     return res
 
 
+def autotune_curve(n_slots: int = pc.SERVE_N_SLOTS, batch: int = 64,
+                   reps: int = 3, seed: int = 0) -> dict:
+    """Measured A/B of the autotuned plan vs the ``default_plan``
+    heuristics (``kernels/autotune.py`` vs ``core/execution_plan.py``) at
+    the two Fig. 7 operating points.
+
+    One tuning run (real timer, this device), then for each plan a fresh
+    engine measures:
+
+    * *online*: full-occupancy slot-step wall time (the streaming point);
+    * *offline*: one bulk ``classify_batch`` of ``batch`` images.
+
+    Contracts asserted per plan: bit-identical logits between the two
+    plans (a tuned plan may only be faster, never different) and
+    ``step_cache_size == 1`` after both points. Feeds the ``autotune``
+    section of the perf record (``benchmarks/gen_bench_record.py``), gated
+    by ``tools/compare_bench.py`` (tuned ≥ default within the noise
+    floor).
+    """
+    from repro.core import execution_plan
+    from repro.kernels.autotune import autotune_packed
+
+    packed = bcnn.fold_model(bcnn.init(jax.random.PRNGKey(seed)))
+    rng = np.random.default_rng(seed)
+    report: dict = {}
+    plans = {"default": execution_plan.default_plan(packed),
+             "tuned": autotune_packed(packed, report=report)}
+    xb = rng.random((batch, 32, 32, 3)).astype(np.float32)
+    points, logits = {}, {}
+    for name, plan in plans.items():
+        eng = BCNNEngine.from_packed(packed, n_slots=n_slots, plan=plan)
+        eng.warmup()
+        # online point: step wall time at full occupancy
+        dt_on = 0.0
+        for _ in range(reps):
+            for img in xb[:n_slots]:
+                eng.submit(img)
+            t0 = time.perf_counter()
+            eng.run()
+            dt_on += time.perf_counter() - t0
+        dt_on /= reps
+        # offline point: one bulk classify_batch
+        eng.classify_batch(xb)                              # warm
+        t0 = time.perf_counter()
+        out = eng.classify_batch(xb)
+        dt_off = time.perf_counter() - t0
+        logits[name] = np.asarray(out)
+        compiles = eng.step_cache_size
+        assert compiles == 1, (
+            f"{name} plan recompiled: step jit cache size {compiles} after "
+            f"the online + offline points (contract is exactly 1)")
+        points[name] = {"plan": plan.describe(),
+                        "online_step_ms": dt_on * 1e3,
+                        "online_img_per_s": n_slots / dt_on,
+                        "offline_img_per_s": batch / dt_off,
+                        "step_compilations": compiles}
+    np.testing.assert_array_equal(logits["tuned"], logits["default"])
+    return {"n_slots": n_slots, "batch": batch,
+            "n_candidates": report["n_candidates"],
+            "n_eligible": report["n_eligible"],
+            "bit_exact": True,
+            "default": points["default"], "tuned": points["tuned"],
+            "speedup_online": (points["tuned"]["online_img_per_s"]
+                               / points["default"]["online_img_per_s"]),
+            "speedup_offline": (points["tuned"]["offline_img_per_s"]
+                                / points["default"]["offline_img_per_s"])}
+
+
+def run_autotune(verbose: bool = True, **kw) -> dict:
+    res = autotune_curve(**kw)
+    if verbose:
+        print(f"autotune A/B (tuned vs default_plan, "
+              f"{res['n_candidates']} candidates measured, "
+              f"{res['n_eligible']} eligible):")
+        for name in ("default", "tuned"):
+            p = res[name]
+            print(f"  {name:7s}: path {p['plan']['path']}, fusion "
+                  f"{'on' if p['plan']['conv_fusion'] else 'off'} — "
+                  f"online {p['online_img_per_s']:8.1f} img/s, "
+                  f"offline {p['offline_img_per_s']:8.1f} img/s "
+                  f"(step compiled {p['step_compilations']}×)")
+        print(f"  tuned/default speedup: online "
+              f"{res['speedup_online']:.2f}×, offline "
+              f"{res['speedup_offline']:.2f}× (logits bit-identical)")
+    return res
+
+
 def run(verbose: bool = True, measure: bool = True) -> dict:
     pa = paper_curves()
     res = {"paper": pa,
@@ -957,6 +1044,11 @@ if __name__ == "__main__":
                          "(models/xnor_lm.py on the slot engine): prefill "
                          "tok/s vs batch and decode tok/s vs occupancy, "
                          "with the one-compile + hot-swap contracts")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure the autotuned-plan vs default-plan A/B "
+                         "(kernels/autotune.py): online + offline "
+                         "operating points, bit-exactness and one-compile "
+                         "contracts asserted")
     ap.add_argument("--replicas", type=int, default=pc.FIG7_ROUTER_REPLICAS,
                     help="replica count for --router")
     ap.add_argument("--slots", type=int, default=pc.SERVE_N_SLOTS)
@@ -977,6 +1069,8 @@ if __name__ == "__main__":
         out = run_autoscale()
     elif args.xnor_lm:
         out = run_xnor_lm(n_slots=args.slots)
+    elif args.autotune:
+        out = run_autotune(n_slots=args.slots, reps=args.reps)
     elif args.online:
         out = run_online(n_slots=args.slots, n_requests=args.requests)
     else:

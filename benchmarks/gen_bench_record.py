@@ -47,6 +47,7 @@ def build_record(pr: int, *, fast: bool = False) -> dict:
         **({"max_replicas": 2, "burst_online": 8, "burst_bulk": 4,
             "ab_bulk": 8, "idle_pumps": 400} if fast else {}))
     lm = fig7.xnor_lm_curve(reps=reps)
+    autotune = fig7.autotune_curve(batch=32 if fast else 64, reps=reps)
 
     return {
         "record": pr,
@@ -115,6 +116,31 @@ def build_record(pr: int, *, fast: bool = False) -> dict:
                                  / min(lm["decode"]["step_ms"])),
             "step_compilations": lm["step_compilations"],
             "swap_step_compilations": lm["swap_step_compilations"],
+        },
+        # measure-and-cache kernel autotuning (kernels/autotune.py, PR 10+):
+        # the tuned-vs-default A/B at the online + offline operating points.
+        # Gated by tools/compare_bench.py: tuned may not fall below the
+        # noise floor of default, and both plans' one-compile contracts
+        # must hold exactly. "bit_exact" records the asserted
+        # logits-identity between the plans.
+        "autotune": {
+            "n_candidates": autotune["n_candidates"],
+            "n_eligible": autotune["n_eligible"],
+            "bit_exact": autotune["bit_exact"],
+            "default_plan": autotune["default"]["plan"],
+            "tuned_plan": autotune["tuned"]["plan"],
+            "default_online_img_per_s":
+                autotune["default"]["online_img_per_s"],
+            "tuned_online_img_per_s":
+                autotune["tuned"]["online_img_per_s"],
+            "default_offline_img_per_s":
+                autotune["default"]["offline_img_per_s"],
+            "tuned_offline_img_per_s":
+                autotune["tuned"]["offline_img_per_s"],
+            "default_step_compilations":
+                autotune["default"]["step_compilations"],
+            "tuned_step_compilations":
+                autotune["tuned"]["step_compilations"],
         },
         "router": {
             "plan": router["plan"],

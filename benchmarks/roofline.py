@@ -1,5 +1,11 @@
 """Roofline report: experiments/cells/*.json → the EXPERIMENTS.md §Roofline
-table (per arch × shape × mesh: three terms, bottleneck, useful ratio)."""
+table (per arch × shape × mesh: three terms, bottleneck, useful ratio).
+
+Also renders the fused-boundary roofline (``fused_boundary_markdown``):
+per fused conv pair, the HBM bytes the cross-layer megakernel deletes
+(``benchmarks/kernels.py::fused_boundary_bytes``) priced at the modeled HBM
+bandwidth — the memory-roofline headroom the ``kernels/autotune.py`` tuner
+races against when it times fused vs sequential."""
 from __future__ import annotations
 
 import argparse
@@ -54,13 +60,55 @@ def markdown(out_dir: str = "experiments/cells", mesh: str = "16x16",
     return "\n".join(lines)
 
 
+def fused_boundary_rows() -> list[dict]:
+    """Per fused conv pair: the HBM boundary traffic the megakernel
+    deletes, priced at the modeled HBM bandwidth.
+
+    Shapes come from ``benchmarks/kernels.py::FUSED_PAIR_SHAPES`` (the two
+    fusable Table 2 pairs) and the byte model from
+    ``benchmarks/kernels.py::fused_boundary_bytes``; ``t_saved`` is that
+    traffic divided by ``HW["hbm_bw"]`` — the roofline-model upper bound
+    on what cross-layer fusion can win at each pair, independent of any
+    measurement."""
+    from benchmarks.kernels import FUSED_PAIR_SHAPES, fused_boundary_bytes
+    out = []
+    for name, n, h, w, c, o1, o2, f in FUSED_PAIR_SHAPES:
+        b = fused_boundary_bytes(n, h, w, o1)
+        saved = b["unfused"] - b["fused"]
+        out.append({"pair": name, "n": n, "h": h, "w": w, "o1": o1,
+                    "unfused_bytes": b["unfused"],
+                    "fused_bytes": b["fused"],
+                    "saved_bytes": saved,
+                    "t_saved": saved / HW["hbm_bw"]})
+    return out
+
+
+def fused_boundary_markdown() -> str:
+    """Markdown table of ``fused_boundary_rows`` (EXPERIMENTS.md-style)."""
+    lines = [
+        "| pair | boundary (N,H,W,O1) | unfused bytes | fused bytes | "
+        "saved | t_saved @ HBM bw |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in fused_boundary_rows():
+        lines.append(
+            f"| {r['pair']} | ({r['n']},{r['h']},{r['w']},{r['o1']}) | "
+            f"{r['unfused_bytes']:,} | {r['fused_bytes']:,} | "
+            f"{r['saved_bytes']:,} | {fmt_s(r['t_saved'])} |")
+    return "\n".join(lines)
+
+
 def run(verbose: bool = True, out_dir: str = "experiments/cells") -> dict:
     res = rows(out_dir, mesh=None)
     n_ok = sum(1 for r in res if r["ok"])
     if verbose:
         print(markdown(out_dir))
         print(f"\n{n_ok}/{len(res)} cells ok")
-    return {"n_ok": n_ok, "n": len(res)}
+        print("\nFused conv-pair boundary traffic "
+              "(kernels/xnor_conv_fused.py):")
+        print(fused_boundary_markdown())
+    return {"n_ok": n_ok, "n": len(res),
+            "fused_boundary": fused_boundary_rows()}
 
 
 if __name__ == "__main__":
@@ -69,3 +117,5 @@ if __name__ == "__main__":
     ap.add_argument("--mesh", default="16x16")
     a = ap.parse_args()
     print(markdown(a.out, a.mesh))
+    print()
+    print(fused_boundary_markdown())

@@ -183,7 +183,8 @@ N_LAYERS = 9  # CONV-1..6 (indices 0..5) + FC-1..3 (indices 6..8)
 
 def apply_packed_layer(packed: BCNNPacked, idx: int, h: jnp.ndarray, *,
                        path: str = "mxu",
-                       conv_strategy: str | None = None) -> jnp.ndarray:
+                       conv_strategy: str | None = None,
+                       plan=None) -> jnp.ndarray:
     """Apply ONE layer of the packed deployment forward (paper Fig. 3).
 
     ``h`` is the layer's input in its *natural* inter-layer form, and the
@@ -201,8 +202,16 @@ def apply_packed_layer(packed: BCNNPacked, idx: int, h: jnp.ndarray, *,
     This is the unit the stage-pipelined deployment forward
     (``parallel/bcnn_pipeline.py``) partitions; ``forward_packed`` is the
     sequential fold of all ``N_LAYERS`` of them.
+
+    ``plan`` — an `core/execution_plan.py::ExecutionPlan`; when given it
+    supplies the kernel path and the per-layer resolved conv strategy, and
+    the bare ``path=``/``conv_strategy=`` kwargs are ignored (they remain
+    as deprecated shims for one release).
     """
     from repro.kernels import ops
+    if plan is not None:
+        path = plan.path
+        conv_strategy = plan.strategy_for(idx)
     if idx == 0:
         # layer 1: fp conv (eq. 7) → NormBinarize → {0,1} bits
         return bitpack.encode_pm1(bconv.fpconv_apply(packed.conv1, h))
@@ -260,43 +269,57 @@ def plan_layer_groups(start: int = 0, stop: int = N_LAYERS, *,
 
 def apply_packed_group(packed: BCNNPacked, group: tuple[int, ...],
                        h: jnp.ndarray, *, path: str = "mxu",
-                       conv_strategy: str | None = None) -> jnp.ndarray:
+                       conv_strategy: str | None = None,
+                       plan=None) -> jnp.ndarray:
     """Apply ONE ``plan_layer_groups`` group of the packed forward.
 
     Singleton groups defer to ``apply_packed_layer``; (i, i+1) pairs run the
     fused megakernel via ``bconv.apply_packed_pair`` — bit-exact with the
     two-layer sequential fold, but the intermediate bit map never leaves
     VMEM. ``conv_strategy`` only shapes unfused layers (the fused kernel is
-    its own dataflow).
+    its own dataflow). With a ``plan``
+    (`core/execution_plan.py::ExecutionPlan`) the path, per-layer strategy,
+    and the fused pair's (th, tw) output tile all come from the plan.
     """
     if len(group) == 1:
         return apply_packed_layer(packed, group[0], h, path=path,
-                                  conv_strategy=conv_strategy)
+                                  conv_strategy=conv_strategy, plan=plan)
     i, j = group
     if j != i + 1 or not 1 <= i < j <= 5:
         raise ValueError(f"not a fusible binary-conv pair: {group}")
+    tiles = None
+    if plan is not None:
+        path = plan.path
+        tiles = plan.tiles_for(i)
     return bconv.apply_packed_pair(packed.convs[i - 1], packed.convs[j - 1],
-                                   h, maxpool_b=CONV_SPECS[j][2], path=path)
+                                   h, maxpool_b=CONV_SPECS[j][2], path=path,
+                                   tiles=tiles)
 
 
 def forward_packed(packed: BCNNPacked, x01: jnp.ndarray,
                    path: str = "mxu",
                    conv_strategy: str | None = None,
-                   conv_fusion: bool | None = None) -> jnp.ndarray:
+                   conv_fusion: bool | None = None,
+                   plan=None) -> jnp.ndarray:
     """Deployment forward: bit feature maps all the way (paper Fig. 3).
 
-    ``conv_strategy``: "direct" | "im2col" | "auto"/None — the binary-conv
-    dataflow (see core/bconv.py); configs/bcnn_cifar10.py re-exports the
-    default. ``conv_fusion``: fuse same-resolution conv pairs into the
-    cross-layer megakernel (None → ``bconv.DEFAULT_CONV_FUSION``); bit-exact
-    either way. Not jit'd at the top level: the packed artifacts carry
+    All kernel choices live in ONE ``plan``
+    (`core/execution_plan.py::ExecutionPlan`); when None, the deprecated
+    ``path``/``conv_strategy``/``conv_fusion`` kwargs are resolved into a
+    plan via `core/execution_plan.py::build_plan` — the historical rules,
+    applied once up front, so legacy call sites compute bit-exactly what
+    they always did. Not jit'd at the top level: the packed artifacts carry
     static ints (k) that must stay Python values; each XNOR kernel call is
     jit'd internally.
     """
+    if plan is None:
+        from repro.core import execution_plan
+        plan = execution_plan.build_plan(
+            packed, path=path, conv_strategy=conv_strategy,
+            conv_fusion=conv_fusion, input_hw=x01.shape[1:3])
     h = x01
-    for group in plan_layer_groups(conv_fusion=conv_fusion):
-        h = apply_packed_group(packed, group, h, path=path,
-                               conv_strategy=conv_strategy)
+    for group in plan_layer_groups(conv_fusion=plan.conv_fusion):
+        h = apply_packed_group(packed, group, h, plan=plan)
     return h
 
 
@@ -377,15 +400,20 @@ class PackedForward:
 
     def __init__(self, packed: BCNNPacked, *, path: str = "mxu",
                  conv_strategy: str | None = None,
-                 conv_fusion: bool | None = None):
+                 conv_fusion: bool | None = None,
+                 plan=None):
+        if plan is None:
+            from repro.core import execution_plan
+            plan = execution_plan.build_plan(packed, path=path,
+                                             conv_strategy=conv_strategy,
+                                             conv_fusion=conv_fusion)
         self._packed = packed
+        self._plan = plan
         arrays, rebuild = split_packed(packed)
         self._arrays = arrays
 
         def fwd(arrs, x01: jnp.ndarray) -> jnp.ndarray:
-            return forward_packed(rebuild(arrs), x01, path=path,
-                                  conv_strategy=conv_strategy,
-                                  conv_fusion=conv_fusion)
+            return forward_packed(rebuild(arrs), x01, plan=plan)
 
         self._jit = jax.jit(fwd)
 
@@ -393,6 +421,11 @@ class PackedForward:
     def packed(self) -> BCNNPacked:
         """The packed net currently being served."""
         return self._packed
+
+    @property
+    def plan(self):
+        """The `core/execution_plan.py::ExecutionPlan` closed over the jit."""
+        return self._plan
 
     def __call__(self, x01: jnp.ndarray) -> jnp.ndarray:
         return self._jit(self._arrays, x01)
@@ -411,7 +444,8 @@ class PackedForward:
 
 def make_packed_forward(packed: BCNNPacked, *, path: str = "mxu",
                         conv_strategy: str | None = None,
-                        conv_fusion: bool | None = None) -> PackedForward:
+                        conv_fusion: bool | None = None,
+                        plan=None) -> PackedForward:
     """Close the packed statics over ``forward_packed`` → a ``PackedForward``.
 
     The returned object is a plain ``x01 → logits`` callable with a
@@ -423,9 +457,11 @@ def make_packed_forward(packed: BCNNPacked, *, path: str = "mxu",
     megakernel for the planner's same-resolution pairs; the hot-swap and
     zero-recompile contracts are unchanged (``split_packed`` statics are
     identical — the fused kernel consumes the same packed arrays).
+    ``plan`` — an `core/execution_plan.py::ExecutionPlan` carrying every
+    kernel choice at once; the other kwargs become no-ops when it is given.
     """
     return PackedForward(packed, path=path, conv_strategy=conv_strategy,
-                         conv_fusion=conv_fusion)
+                         conv_fusion=conv_fusion, plan=plan)
 
 
 def loss_fn(params: BCNNParams, x01: jnp.ndarray, labels: jnp.ndarray):

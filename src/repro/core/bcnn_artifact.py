@@ -19,9 +19,12 @@ Artifact layout (one directory):
   commit point; it records which weights file is live): format name +
   version, per-leaf shape/dtype/CRC32 for arrays, the static Python
   leaves (k / fh / fw / fc3_k / BN eps) by value, the tree structure
-  counts, and a provenance block (who folded it: train step, seed, jax
-  version, caller-supplied fields). Single-writer: concurrent saves into
-  one directory are not coordinated.
+  counts, a provenance block (who folded it: train step, seed, jax
+  version, caller-supplied fields), and — since version 2 — an optional
+  ``tuning`` section: the measured kernel plan from
+  ``kernels/autotune.py``, itself versioned and CRC'd, keyed by
+  (backend, device kind, model geometry) so a foreign host ignores it.
+  Single-writer: concurrent saves into one directory are not coordinated.
 
 Integrity: every array carries a CRC32 verified on load before anything
 reaches the engine; version/format mismatches and missing leaves raise
@@ -39,6 +42,7 @@ from __future__ import annotations
 import json
 import os
 import time
+import zlib
 from typing import Any
 
 import jax
@@ -54,7 +58,9 @@ from repro.core.crc import crc32_array as _crc
 from repro.core.normbinarize import BNParams, NBThreshold
 
 FORMAT = "bcnn-packed"
-VERSION = 1
+VERSION = 2                      # 2: optional "tuning" section (autotuner)
+MIN_VERSION = 1                  # oldest artifact this reader still loads
+TUNING_VERSION = 1               # schema of the "tuning" section itself
 MANIFEST = "manifest.json"
 WEIGHTS_PREFIX = "weights-"      # one uniquely-named npz per save
 
@@ -93,13 +99,28 @@ def _walk(packed: BCNNPacked):
     yield "fc3_k", packed.fc3_k
 
 
+def _tuning_crc(tuning: dict) -> int:
+    """CRC32 over the canonical JSON of the tuning payload — the manifest
+    stores it next to the payload so a hand-edited or bit-rotted plan is
+    rejected rather than silently steering kernel choices."""
+    blob = json.dumps({"key": tuning["key"], "plan": tuning["plan"]},
+                      sort_keys=True, separators=(",", ":"))
+    return zlib.crc32(blob.encode("utf-8"))
+
+
 def save_packed(path: str, packed: BCNNPacked, *,
-                provenance: dict | None = None) -> str:
+                provenance: dict | None = None,
+                tuning: dict | None = None) -> str:
     """Write ``packed`` as a versioned artifact directory at ``path``.
 
     ``provenance`` — caller-supplied fold provenance (train steps, seed,
     final loss, …) recorded verbatim in the manifest next to the
     auto-collected fields (fold entry point, jax version, creation time).
+    ``tuning`` — optional measured kernel plan from
+    ``kernels/autotune.py::tuning_section`` (``{"key": ..., "plan": ...}``);
+    persisted as a versioned, CRC'd manifest section so the next load on
+    the same device kind reuses it without re-measuring
+    (``kernels/autotune.py::plan_for_host``).
     Returns the manifest path.
 
     Commit protocol (lose-nothing, including re-export over a live
@@ -139,6 +160,11 @@ def save_packed(path: str, packed: BCNNPacked, *,
                        "created_unix": time.time(),
                        **(provenance or {})},
     }
+    if tuning is not None:
+        manifest["tuning"] = {"tuning_version": TUNING_VERSION,
+                              "key": tuning["key"],
+                              "plan": tuning["plan"],
+                              "crc": _tuning_crc(tuning)}
     # commit protocol (docstring): fresh weights file, then the manifest
     # rename as the single atomic commit point
     mpath = os.path.join(path, MANIFEST)
@@ -184,11 +210,37 @@ def load_manifest(path: str) -> dict:
     if manifest.get("format") != FORMAT:
         raise ArtifactError(f"format {manifest.get('format')!r} != "
                             f"{FORMAT!r} at {path!r}")
-    if manifest.get("version") != VERSION:
-        raise ArtifactError(f"unsupported artifact version "
-                            f"{manifest.get('version')!r} (reader supports "
-                            f"{VERSION}) at {path!r}")
+    version = manifest.get("version")
+    if not isinstance(version, int) or not \
+            MIN_VERSION <= version <= VERSION:
+        raise ArtifactError(f"unsupported artifact version {version!r} "
+                            f"(reader supports {MIN_VERSION}..{VERSION}) "
+                            f"at {path!r}")
     return manifest
+
+
+def load_tuning(path_or_manifest) -> dict | None:
+    """Extract the tuning payload ``{"key", "plan"}`` from an artifact.
+
+    Accepts an artifact directory path or an already-loaded manifest dict.
+    Returns ``None`` when the artifact predates version 2, carries no
+    tuning section, or the section's schema version is newer than this
+    reader — absence is normal (the caller falls back to
+    ``kernels/autotune.py::plan_for_host`` heuristics). A CRC mismatch,
+    by contrast, is corruption and raises ``ArtifactError``.
+    """
+    manifest = (path_or_manifest if isinstance(path_or_manifest, dict)
+                else load_manifest(path_or_manifest))
+    tuning = manifest.get("tuning")
+    if tuning is None:
+        return None
+    if tuning.get("tuning_version") != TUNING_VERSION:
+        return None                      # newer schema: ignore, don't error
+    payload = {"key": tuning.get("key"), "plan": tuning.get("plan")}
+    if _tuning_crc(payload) != tuning.get("crc"):
+        raise ArtifactError("tuning section CRC mismatch — corrupt or "
+                            "hand-edited plan; refusing to use it")
+    return payload
 
 
 def load_packed(path: str) -> BCNNPacked:

@@ -203,7 +203,8 @@ def apply_packed(fp: BConvPacked, a_bits: jnp.ndarray, *,
 
 def apply_packed_pair(fa: BConvPacked, fb: BConvPacked, a_bits: jnp.ndarray,
                       *, maxpool_b: bool = False,
-                      path: str = "mxu") -> jnp.ndarray:
+                      path: str = "mxu",
+                      tiles: tuple[int, int] | None = None) -> jnp.ndarray:
     """Fused pair of packed binary convs: conv A → NormBinarize → (VMEM
     re-pack) → conv B → NormBinarize → optional trailing 2×2 max-pool.
 
@@ -213,6 +214,8 @@ def apply_packed_pair(fa: BConvPacked, fb: BConvPacked, a_bits: jnp.ndarray,
     inside a fused group; it keeps selecting the lowering of unfused layers.
     Requires the per-position weight layouts and 32-aligned channel counts
     (the same condition under which "auto" resolves to "direct").
+    ``tiles``: static (th, tw) output-tile override from an
+    `core/execution_plan.py::ExecutionPlan` (None → pick_tiles heuristic).
     """
     n, h, w, c = a_bits.shape
     if fa.w_words_hw is None or fb.w_words_hw is None:
@@ -227,7 +230,7 @@ def apply_packed_pair(fa: BConvPacked, fb: BConvPacked, a_bits: jnp.ndarray,
         a_bits, fa.w_words_hw, fb.w_words_hw, ka=fa.k, kb=fb.k,
         fha=fa.fh, fwa=fa.fw, fhb=fb.fh, fwb=fb.fw, pool_b=maxpool_b,
         thr_a_c=fa.thr.c, thr_a_flip=fa.thr.flip,
-        thr_b_c=fb.thr.c, thr_b_flip=fb.thr.flip, path=path)
+        thr_b_c=fb.thr.c, thr_b_flip=fb.thr.flip, path=path, tiles=tiles)
 
 
 # ---------------------------------------------------------------------------

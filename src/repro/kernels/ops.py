@@ -194,7 +194,7 @@ def xnor_conv2d(a_bits: jnp.ndarray, w_words: jnp.ndarray, *, k: int,
 
 
 @functools.partial(jax.jit, static_argnames=("ka", "kb", "fha", "fwa", "fhb",
-                                             "fwb", "pool_b", "path",
+                                             "fwb", "pool_b", "path", "tiles",
                                              "interpret"))
 def xnor_conv2d_pair(a_bits: jnp.ndarray, wa_words: jnp.ndarray,
                      wb_words: jnp.ndarray, *, ka: int, kb: int,
@@ -203,6 +203,7 @@ def xnor_conv2d_pair(a_bits: jnp.ndarray, wa_words: jnp.ndarray,
                      thr_a_c: jnp.ndarray, thr_a_flip: jnp.ndarray,
                      thr_b_c: jnp.ndarray, thr_b_flip: jnp.ndarray,
                      path: str = "mxu",
+                     tiles: tuple[int, int] | None = None,
                      interpret: bool | None = None) -> jnp.ndarray:
     """Fused pair of same-resolution binary convs (kernels/xnor_conv_fused.py).
 
@@ -220,7 +221,10 @@ def xnor_conv2d_pair(a_bits: jnp.ndarray, wa_words: jnp.ndarray,
     both epilogues always binarize (the planner only fuses interior binary
     conv layers). Returns (N, HO, WO, OB) {0,1} int8, HO = H//2 when
     ``pool_b`` else H. ``path``: "vpu" | "mxu" | "xla" (the two-call
-    composition — bit-identical, no Pallas).
+    composition — bit-identical, no Pallas). ``tiles``: static (th, tw)
+    spatial output-tile override (a measured `kernels/autotune.py` winner);
+    None keeps the `kernels/xnor_conv_fused.py::pick_tiles` heuristic.
+    Ignored on the "xla" path, which has no tile grid.
     """
     from repro.kernels import xnor_conv_fused as kfused
     if interpret is None:
@@ -248,7 +252,11 @@ def xnor_conv2d_pair(a_bits: jnp.ndarray, wa_words: jnp.ndarray,
     pf = 2 if pool_b else 1
     assert h % pf == 0 and w % pf == 0, (h, w, pf)
     ho, wo = h // pf, w // pf           # pooled output extent
-    th, tw = kfused.pick_tiles(ho, wo, pf=pf, fhb=fhb, fwb=fwb, oa=oa, la=la)
+    if tiles is None:
+        th, tw = kfused.pick_tiles(ho, wo, pf=pf, fhb=fhb, fwb=fwb, oa=oa,
+                                   la=la)
+    else:
+        th, tw = tiles
     ho_p = -(-ho // th) * th
     wo_p = -(-wo // tw) * tw
     pha, pwa = fha // 2, fwa // 2

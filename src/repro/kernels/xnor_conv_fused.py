@@ -177,20 +177,30 @@ def _fused_call(kernel, a_words, wa, ca, fa, wb, cb, fb, *, ho: int, wo: int,
     )(a_words, wa, ca, fa, wb, cb, fb)
 
 
+def halo_scratch(th: int, tw: int, *, pf: int, fhb: int, fwb: int, oa: int,
+                 la: int) -> int:
+    """VMEM cost (int32 elements) of a (th, tw) fused-pair output tile.
+
+    The dominant temporary is conv A's XNOR scratch over the halo:
+    (pf·th + FHb − 1)·(pf·tw + FWb − 1) · min(OA, OCHUNK) · La int32 words.
+    Shared between ``pick_tiles`` (the heuristic) and
+    `kernels/autotune.py::tile_candidates` (the measured enumeration), so
+    both agree on which tiles are legal for the budget.
+    """
+    return ((pf * th + fhb - 1) * (pf * tw + fwb - 1)
+            * min(oa, OCHUNK) * la)
+
+
 def pick_tiles(ho: int, wo: int, *, pf: int, fhb: int, fwb: int, oa: int,
                la: int, budget: int = SCRATCH_BUDGET) -> tuple[int, int]:
-    """Largest power-of-two tiles whose halo popcount scratch fits ``budget``.
-
-    The dominant VMEM temporary is conv A's XNOR scratch over the halo:
-    (pf·th + FHb − 1)·(pf·tw + FWb − 1) · min(OA, OCHUNK) · La int32 words.
-    """
+    """Largest power-of-two tiles whose halo popcount scratch fits ``budget``
+    (``halo_scratch``), halving the larger dimension first."""
     from repro.kernels.ops import _block_for
     th = _block_for(ho, TH, floor=1)
     tw = _block_for(wo, TW, floor=1)
     while th * tw > 1:
-        scratch = ((pf * th + fhb - 1) * (pf * tw + fwb - 1)
-                   * min(oa, OCHUNK) * la)
-        if scratch <= budget:
+        if halo_scratch(th, tw, pf=pf, fhb=fhb, fwb=fwb, oa=oa,
+                        la=la) <= budget:
             break
         if th >= tw:
             th = max(1, th // 2)

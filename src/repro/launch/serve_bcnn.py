@@ -79,7 +79,67 @@ def parse_priority_mix(spec: str) -> dict[str, int]:
     return mix
 
 
-def serve_fleet(packed, x, args):
+def resolve_plan(packed, args):
+    """``--autotune`` / ``--tuning-cache`` → the ExecutionPlan to serve
+    with, or None (no tuning flags: the engines build the heuristic plan
+    from the per-knob CLI flags exactly as before).
+
+    Cache-first protocol: a usable ``tuning`` section in ``--tuning-cache``
+    (or, failing that, ``--artifact``) whose (backend, device kind,
+    geometry) key matches THIS host is reused without measuring — the
+    ``tuning: cache hit`` line is the operator's (and the CI smoke lane's)
+    signal that no re-tuning happened. Only then does ``--autotune``
+    measure (``kernels/autotune.py::autotune_packed``).
+    """
+    if not (args.autotune or args.tuning_cache):
+        return None
+    from repro.core import bcnn_artifact
+    from repro.kernels import autotune as at
+    tuning = None
+    for cache_dir in (args.tuning_cache, args.artifact):
+        if not cache_dir:
+            continue
+        try:
+            tuning = bcnn_artifact.load_tuning(cache_dir)
+        except bcnn_artifact.ArtifactError as e:
+            print(f"tuning: cache at {cache_dir} unusable ({e})")
+            tuning = None
+        if tuning is not None:
+            break
+    plan, source = at.plan_for_host(packed, tuning)
+    fusion = "on" if plan.conv_fusion else "off"
+    if source == "cached":
+        print(f"tuning: cache hit — reusing the stored plan "
+              f"({plan.path} path, fusion {fusion}) without re-measuring")
+    elif args.autotune:
+        report = {}
+        plan = at.autotune_packed(packed, report=report)
+        fusion = "on" if plan.conv_fusion else "off"
+        print(f"tuning: measured {report['n_candidates']} candidate(s) "
+              f"({report['n_eligible']} eligible) → {plan.path} path, "
+              f"fusion {fusion}")
+    else:
+        print("tuning: no usable cached plan for this host — serving the "
+              "default heuristics (pass --autotune to measure)")
+    return plan
+
+
+def export_artifact(path, packed, plan, args):
+    """``--export-artifact``: persist the served weights — and, when the
+    plan is a measured one, its ``tuning`` section — so the next
+    ``--artifact`` serve reuses the plan without re-tuning."""
+    from repro.core import bcnn_artifact
+    from repro.kernels import autotune as at
+    tuning = (at.tuning_section(packed, plan)
+              if plan is not None and plan.tuned else None)
+    bcnn_artifact.save_packed(path, packed, tuning=tuning,
+                              provenance={"seed": args.seed,
+                                          "exported_by": "serve_bcnn"})
+    print(f"exported artifact to {path}"
+          + (" (with tuning section)" if tuning else ""))
+
+
+def serve_fleet(packed, x, args, plan=None):
     """The fleet tier: async router over ``--replicas`` engine replicas,
     optionally elastic (``--autoscale``: a controller thread walks the
     replica count between the hysteresis watermarks as load changes)."""
@@ -98,7 +158,7 @@ def serve_fleet(packed, x, args):
     router = Router.from_packed(
         packed, n_replicas=args.replicas, n_slots=args.slots,
         path=args.path, conv_strategy=args.conv_strategy,
-        conv_fusion=args.conv_fusion,
+        conv_fusion=args.conv_fusion, plan=plan,
         max_queue=args.max_queue, history=max(4096, args.requests),
         online_reserve=args.online_reserve,
         bulk_chunk=args.bulk_chunk if args.bulk_chunk > 0 else None,
@@ -259,6 +319,23 @@ def main(argv=None):
                     help="micro-chunk size bulk batches are split into for "
                          "co-scheduling (fleet tier); 0 = one request per "
                          "image")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure-and-cache kernel autotuning "
+                         "(kernels/autotune.py): reuse a matching cached "
+                         "plan from --tuning-cache/--artifact if one "
+                         "exists ('tuning: cache hit'), otherwise time "
+                         "the legal candidate space on this device and "
+                         "serve the winning ExecutionPlan (bit-exact by "
+                         "construction)")
+    ap.add_argument("--tuning-cache", default="", metavar="DIR",
+                    help="artifact directory to read a cached tuning "
+                         "section from (falls back to --artifact); stale "
+                         "or foreign-device entries are ignored, never "
+                         "an error")
+    ap.add_argument("--export-artifact", default="", metavar="DIR",
+                    help="after building the plan, export the served "
+                         "weights (plus the tuned plan, with --autotune) "
+                         "as a deployment artifact to DIR")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -274,15 +351,18 @@ def main(argv=None):
         packed = bcnn.fold_model(params)
     x, _ = SyntheticImages(global_batch=args.requests,
                            seed=args.seed).batch(0)
+    plan = resolve_plan(packed, args)
+    if args.export_artifact:
+        export_artifact(args.export_artifact, packed, plan, args)
     if args.replicas >= 2 or args.autoscale:
-        return serve_fleet(packed, x, args)
+        return serve_fleet(packed, x, args, plan=plan)
     if args.rolling_swap:
         raise SystemExit("--rolling-swap needs --replicas >= 2 or "
                          "--autoscale (the rolling walk is a fleet-tier "
                          "operation)")
     eng = BCNNEngine.from_packed(packed, n_slots=args.slots, path=args.path,
                                  conv_strategy=args.conv_strategy,
-                                 conv_fusion=args.conv_fusion,
+                                 conv_fusion=args.conv_fusion, plan=plan,
                                  pipeline_stages=args.pipeline_stages,
                                  pipeline_micro_batch=args.micro_batch,
                                  data_shards=args.data_shards,

@@ -446,10 +446,12 @@ class XnorLMServeModel:
     family = "xnor_lm"
 
     def __init__(self, cfg: XnorLMConfig, packed: XnorLMPacked, *,
-                 mode: str = "bw", path: str = "mxu"):
+                 mode: str = "bw", path: str = "mxu", plan=None):
         self.cfg = cfg
         self.arrays, self._rebuild = split_packed(packed)
         self._packed_ref = packed
+        if plan is not None:    # ExecutionPlan wins over per-knob kwargs
+            mode, path = plan.lm_mode, plan.path
         self._mode, self._path = mode, path
 
     def init_state(self, n_slots: int, max_len: int) -> XnorServeState:
@@ -476,11 +478,14 @@ class XnorLMServeModel:
 def make_serving_engine(cfg: XnorLMConfig, packed: XnorLMPacked, *,
                         n_slots: int = 4, max_len: int | None = None,
                         eos_id: int = -1, mode: str = "bw",
-                        path: str = "mxu"):
+                        path: str = "mxu", plan=None):
     """Packed LM → a live slot engine. Returns ``(engine, model)``; keep
-    the model around for ``swap_arrays`` on hot-swaps."""
+    the model around for ``swap_arrays`` on hot-swaps. ``plan`` (a
+    ``core/execution_plan.py::ExecutionPlan``) overrides ``mode``/``path``
+    with its ``lm_mode``/``path`` — the tuner's decode-GEMM choice
+    (``kernels/autotune.py::autotune_lm_mode``)."""
     from repro.serve.engine import ServingEngine
-    model = XnorLMServeModel(cfg, packed, mode=mode, path=path)
+    model = XnorLMServeModel(cfg, packed, mode=mode, path=path, plan=plan)
     eng = ServingEngine(cfg, model.arrays,
                         n_slots=n_slots, max_len=max_len or cfg.max_len,
                         eos_id=eos_id, model=model)

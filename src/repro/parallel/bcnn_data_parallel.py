@@ -51,7 +51,7 @@ import jax.numpy as jnp
 
 from jax.sharding import PartitionSpec as P
 
-from repro.core import bcnn, bconv
+from repro.core import bcnn, execution_plan as xplan
 from repro.launch.mesh import dp_axes, make_data_mesh
 from repro.parallel import sharding
 from repro.parallel.bcnn_pipeline import (PipelinedForward, StagePlan,
@@ -121,9 +121,15 @@ class ShardedForward:
     def __init__(self, packed: bcnn.BCNNPacked, mesh, micro_batch: int, *,
                  n_stages: int = 1, devices: Sequence | None = None,
                  path: str = "mxu", conv_strategy: str | None = None,
-                 conv_fusion: bool | None = None):
+                 conv_fusion: bool | None = None,
+                 plan: "xplan.ExecutionPlan | None" = None):
         if micro_batch < 1:
             raise ValueError(f"micro_batch must be >= 1, got {micro_batch}")
+        if plan is None:    # deprecated per-knob kwargs → a shim plan
+            plan = xplan.build_plan(packed, path=path,
+                                    conv_strategy=conv_strategy,
+                                    conv_fusion=conv_fusion)
+        self.exec_plan = plan           # the ExecutionPlan (kernel choices)
         self.mesh = mesh
         shards = 1
         for a in dp_axes(mesh):
@@ -132,12 +138,11 @@ class ShardedForward:
         self.plan = DeploymentPlan(
             data_shards=shards, n_stages=n_stages, micro_batch=micro_batch,
             chunk=shards * micro_batch, stage_plan=stage_plan,
-            conv_fusion=(bconv.DEFAULT_CONV_FUSION if conv_fusion is None
-                         else bool(conv_fusion)),
+            conv_fusion=plan.conv_fusion,
             fused_groups=tuple(
                 bcnn.plan_layer_groups(stage_plan.bounds[s],
                                        stage_plan.bounds[s + 1],
-                                       conv_fusion=conv_fusion)
+                                       conv_fusion=plan.conv_fusion)
                 for s in range(n_stages)))
         self._n_classes = packed.fc3_w_words.shape[0]
         if devices is None:
@@ -156,9 +161,7 @@ class ShardedForward:
             self._arrays = self._replicate(arrays)
 
             def fwd(arrs, x01):
-                return bcnn.forward_packed(rebuild(arrs), x01, path=path,
-                                           conv_strategy=conv_strategy,
-                                           conv_fusion=conv_fusion)
+                return bcnn.forward_packed(rebuild(arrs), x01, plan=plan)
 
             self._chunk_fn = jax.jit(_shard_map(
                 fwd, mesh=mesh, in_specs=(P(), spec), out_specs=spec))
@@ -173,8 +176,7 @@ class ShardedForward:
                     packed, self.plan.stage_plan,
                     [self.devices[(s * n_stages + j) % len(self.devices)]
                      for j in range(n_stages)],
-                    micro_batch, path=path, conv_strategy=conv_strategy,
-                    conv_fusion=conv_fusion)
+                    micro_batch, plan=plan)
                 for s in range(shards))
 
     @property
@@ -246,7 +248,9 @@ def make_sharded_forward(packed: bcnn.BCNNPacked, mesh=None, *,
                          micro_batch: int = 8, n_stages: int = 1,
                          devices=None, path: str = "mxu",
                          conv_strategy: str | None = None,
-                         conv_fusion: bool | None = None) -> ShardedForward:
+                         conv_fusion: bool | None = None,
+                         plan: "xplan.ExecutionPlan | None" = None
+                         ) -> ShardedForward:
     """Close packed artifacts over a batch-sharded deployment forward.
 
     The data-parallel counterpart of ``core/bcnn.py::make_packed_forward``
@@ -292,4 +296,4 @@ def make_sharded_forward(packed: bcnn.BCNNPacked, mesh=None, *,
     return ShardedForward(packed, mesh, micro_batch, n_stages=n_stages,
                           devices=devices, path=path,
                           conv_strategy=conv_strategy,
-                          conv_fusion=conv_fusion)
+                          conv_fusion=conv_fusion, plan=plan)

@@ -46,7 +46,7 @@ from typing import Callable, NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core import bcnn, bitpack
+from repro.core import bcnn, bitpack, execution_plan as xplan
 from repro.core.throughput import (BCNN_CONV_LAYERS, BCNN_FC_SPECS,
                                    balance_stages, cycle_conv)
 from repro.parallel.pipeline import schedule_1f1b, stage_costs_from_bounds
@@ -169,31 +169,30 @@ def pad_rows(x: jnp.ndarray, n_rows: int) -> jnp.ndarray:
         [x, jnp.zeros((n_rows - x.shape[0], *x.shape[1:]), x.dtype)])
 
 
-def _make_stage_fn(rebuild: Callable, a: int, b: int, *, path: str,
-                   conv_strategy: str | None,
-                   conv_fusion: bool | None = None) -> Callable:
+def _make_stage_fn(rebuild: Callable, a: int, b: int, *,
+                   plan: "xplan.ExecutionPlan") -> Callable:
     """Closure applying layers [a, b): unpack → layers → pack, jit-ready.
 
-    Statics (layer indices, packed k's, filter sizes) are closed over while
-    the weight arrays arrive as the first jit argument (the
+    Statics (layer indices, packed k's, filter sizes, and every kernel
+    choice in the ``core/execution_plan.py::ExecutionPlan``) are closed
+    over while the weight arrays arrive as the first jit argument (the
     ``core/bcnn.py::split_packed`` hot-swap contract), so the returned
     function has a shape-only jit signature — the same contract as
     ``core/bcnn.py::make_packed_forward``, per stage — and a weight swap
     with identical shapes reuses the compiled executable.
 
-    ``conv_fusion`` plans fused conv pairs WITHIN [a, b) only
+    ``plan.conv_fusion`` plans fused conv pairs WITHIN [a, b) only
     (``core/bcnn.py::plan_layer_groups(a, b, ...)``): a stage cut is a
     device boundary, so a group never spans one — fusion within a stage,
     never across it.
     """
-    groups = bcnn.plan_layer_groups(a, b, conv_fusion=conv_fusion)
+    groups = bcnn.plan_layer_groups(a, b, conv_fusion=plan.conv_fusion)
 
     def stage(arrays, h: jnp.ndarray) -> jnp.ndarray:
         packed = rebuild(arrays)
         h = unpack_boundary(a, h)
         for group in groups:
-            h = bcnn.apply_packed_group(packed, group, h, path=path,
-                                        conv_strategy=conv_strategy)
+            h = bcnn.apply_packed_group(packed, group, h, plan=plan)
         return pack_boundary(b, h)
     return stage
 
@@ -219,29 +218,33 @@ class PipelinedForward:
     must stay 1.
     """
 
-    def __init__(self, packed: bcnn.BCNNPacked, plan: StagePlan,
-                 devices: Sequence, micro_batch: int, *, path: str,
-                 conv_strategy: str | None,
-                 conv_fusion: bool | None = None):
+    def __init__(self, packed: bcnn.BCNNPacked, stage_plan: StagePlan,
+                 devices: Sequence, micro_batch: int, *,
+                 path: str = "mxu", conv_strategy: str | None = None,
+                 conv_fusion: bool | None = None,
+                 plan: "xplan.ExecutionPlan | None" = None):
         if micro_batch < 1:
             raise ValueError(f"micro_batch must be >= 1, got {micro_batch}")
-        self.plan = plan
+        if plan is None:    # deprecated per-knob kwargs → a shim plan
+            plan = xplan.build_plan(packed, path=path,
+                                    conv_strategy=conv_strategy,
+                                    conv_fusion=conv_fusion)
+        self.plan = stage_plan          # the StagePlan (stage cut points)
+        self.exec_plan = plan           # the ExecutionPlan (kernel choices)
         self.micro_batch = micro_batch
-        self.conv_fusion = conv_fusion
+        self.conv_fusion = plan.conv_fusion
         self._packed = packed
         self._n_classes = packed.fc3_w_words.shape[0]
         # stage s runs on devices[s % len(devices)]: fewer devices than
         # stages degrades gracefully (stages co-resident, still correct)
         self.devices = tuple(devices[s % len(devices)]
-                             for s in range(plan.n_stages))
+                             for s in range(stage_plan.n_stages))
         arrays, rebuild = bcnn.split_packed(packed)
         self._stage_arrays = self._place_arrays(arrays)
         self._stage_fns = [
-            jax.jit(_make_stage_fn(rebuild, plan.bounds[s],
-                                   plan.bounds[s + 1], path=path,
-                                   conv_strategy=conv_strategy,
-                                   conv_fusion=conv_fusion))
-            for s in range(plan.n_stages)]
+            jax.jit(_make_stage_fn(rebuild, stage_plan.bounds[s],
+                                   stage_plan.bounds[s + 1], plan=plan))
+            for s in range(stage_plan.n_stages)]
 
     def fused_groups(self) -> tuple:
         """The per-stage fusion plans (for benchmark/plan metadata): one
@@ -336,7 +339,8 @@ def make_pipelined_forward(packed: bcnn.BCNNPacked, *, n_stages: int,
                            micro_batch: int = 1, devices=None,
                            path: str = "mxu",
                            conv_strategy: str | None = None,
-                           conv_fusion: bool | None = None
+                           conv_fusion: bool | None = None,
+                           plan: "xplan.ExecutionPlan | None" = None
                            ) -> PipelinedForward:
     """Close packed artifacts over an N-stage pipelined deployment forward.
 
@@ -352,9 +356,9 @@ def make_pipelined_forward(packed: bcnn.BCNNPacked, *, n_stages: int,
     N < micro_batch) with zero recompiles, so ``BCNNEngine`` can use it as
     a drop-in ``forward_fn``.
     """
-    plan = plan_bcnn_stages(n_stages)
+    stage_plan = plan_bcnn_stages(n_stages)
     if devices is None:
         devices = jax.devices()
-    return PipelinedForward(packed, plan, devices, micro_batch, path=path,
-                            conv_strategy=conv_strategy,
-                            conv_fusion=conv_fusion)
+    return PipelinedForward(packed, stage_plan, devices, micro_batch,
+                            path=path, conv_strategy=conv_strategy,
+                            conv_fusion=conv_fusion, plan=plan)

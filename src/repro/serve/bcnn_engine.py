@@ -106,11 +106,13 @@ class BCNNEngine:
         self._batch_fn = None           # set by from_packed(data_shards=N)
         self._batch_threshold = 0
         self._n_classes = None          # known for from_packed engines
+        self._plan = None               # ExecutionPlan, for from_packed
 
     @classmethod
     def from_packed(cls, packed: bcnn.BCNNPacked, *, n_slots: int = 8,
                     path: str = "auto", conv_strategy: str | None = None,
                     conv_fusion: bool | None = None,
+                    plan=None, autotune: bool = False,
                     pipeline_stages: int = 1,
                     pipeline_micro_batch: int = 1,
                     pipeline_devices=None,
@@ -143,27 +145,41 @@ class BCNNEngine:
         cross-layer fused conv megakernel inside whichever forward is built
         — bit-exact, and the ``step_cache_size``/hot-swap contracts are
         unchanged (the fused kernel consumes the same packed arrays).
+
+        ``plan`` — a ``core/execution_plan.py::ExecutionPlan`` carrying
+        EVERY kernel choice at once (path, per-layer conv strategy, fusion
+        + tiles, LM mode). When given, the per-knob kwargs above are
+        ignored; when omitted they build the equivalent plan (deprecated
+        shims — new code should pass a plan). ``autotune=True`` measures
+        one (``kernels/autotune.py::autotune_packed``) on this device
+        first; serving contracts are identical either way (a plan is
+        static — trace-time only).
         """
+        from repro.core import execution_plan as _xp
+        if autotune and plan is None:
+            from repro.kernels.autotune import autotune_packed
+            plan = autotune_packed(packed)
+        if plan is None:    # deprecated per-knob kwargs → a shim plan
+            plan = _xp.build_plan(packed, path=path,
+                                  conv_strategy=conv_strategy,
+                                  conv_fusion=conv_fusion)
         if pipeline_stages > 1:
             from repro.parallel.bcnn_pipeline import make_pipelined_forward
             fwd = make_pipelined_forward(
                 packed, n_stages=pipeline_stages,
                 micro_batch=pipeline_micro_batch, devices=pipeline_devices,
-                path=_resolve_path(path), conv_strategy=conv_strategy,
-                conv_fusion=conv_fusion)
+                plan=plan)
         else:
-            fwd = bcnn.make_packed_forward(packed, path=_resolve_path(path),
-                                           conv_strategy=conv_strategy,
-                                           conv_fusion=conv_fusion)
+            fwd = bcnn.make_packed_forward(packed, plan=plan)
         eng = cls(fwd, n_slots=n_slots, **kw)
         eng._n_classes = packed.fc3_w_words.shape[0]
+        eng._plan = plan
         if data_shards >= 1:
             from repro.parallel.bcnn_data_parallel import make_sharded_forward
             eng._batch_fn = make_sharded_forward(
                 packed, data_shards=data_shards,
                 micro_batch=data_micro_batch, n_stages=pipeline_stages,
-                path=_resolve_path(path), conv_strategy=conv_strategy,
-                conv_fusion=conv_fusion)
+                plan=plan)
             eng._batch_threshold = (eng._batch_fn.plan.chunk
                                     if batch_threshold is None
                                     else batch_threshold)
@@ -175,6 +191,14 @@ class BCNNEngine:
         ``drive_poisson`` times arrivals with it so an injected
         deterministic clock governs the WHOLE drive, not just the stamps."""
         return self.sched.clock
+
+    @property
+    def plan(self):
+        """The ``core/execution_plan.py::ExecutionPlan`` every forward of
+        this engine was built with (slot step, pipeline stages, bulk
+        data-parallel path share ONE plan), or None for an opaque
+        user ``forward_fn``."""
+        return self._plan
 
     @property
     def forward(self) -> Callable:

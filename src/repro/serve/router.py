@@ -320,6 +320,7 @@ class Router:
                     n_slots: int | None = None, path: str = "auto",
                     conv_strategy: str | None = None,
                     conv_fusion: bool | None = None,
+                    plan=None, autotune: bool = False,
                     warmup: bool = True,
                     clock: Callable[[], float] = time.perf_counter,
                     history: int = 4096, **router_kw) -> "Router":
@@ -332,15 +333,29 @@ class Router:
         The same factory is retained for ``scale_up``, so an elastically
         spawned replica is configured identically and built from the
         fleet's CURRENT packed artifact (post-swap if a rolling swap is
-        in flight)."""
+        in flight).
+
+        ``plan`` / ``autotune``: one ``core/execution_plan.py::ExecutionPlan``
+        for the WHOLE fleet. With ``autotune=True`` (and no explicit plan)
+        the candidate space is measured exactly once
+        (``kernels/autotune.py::autotune_packed``) BEFORE the factory is
+        captured — every initial replica, every ``scale_up`` spawn, and
+        every rolling-swap rebuild reuses the same tuned plan; no replica
+        ever re-measures."""
         if n_replicas < 1:
             raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
         kw = {} if n_slots is None else {"n_slots": n_slots}
+        if autotune and plan is None:
+            from repro.kernels.autotune import autotune_packed
+            plan = autotune_packed(packed)     # tune once, share fleet-wide
+        if plan is None:
+            from repro.core import execution_plan as _xp
+            plan = _xp.build_plan(packed, path=path,
+                                  conv_strategy=conv_strategy,
+                                  conv_fusion=conv_fusion)
 
         def make_engine(p):
-            return BCNNEngine.from_packed(p, path=path,
-                                          conv_strategy=conv_strategy,
-                                          conv_fusion=conv_fusion,
+            return BCNNEngine.from_packed(p, plan=plan,
                                           clock=clock, history=history, **kw)
 
         engines = [make_engine(packed) for _ in range(n_replicas)]

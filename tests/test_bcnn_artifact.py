@@ -117,6 +117,32 @@ def test_version_and_format_rejected(saved):
         bcnn_artifact.load_packed(saved)
 
 
+def test_pre_tuning_version1_artifact_loads_bit_exact(saved, packed):
+    """Backward compat across the tuning-section version bump: an artifact
+    written by the version-1 reader (no ``tuning`` section, ``version: 1``
+    manifest — pinned here by rewriting the manifest to exactly that
+    shape) still loads and serves bit-exact, and ``load_tuning`` reports
+    "no tuning" rather than erroring."""
+    mpath = os.path.join(saved, bcnn_artifact.MANIFEST)
+    man = json.load(open(mpath))
+    assert man["version"] == bcnn_artifact.VERSION == 2  # current writer
+    man["version"] = 1                       # pin the pre-bump manifest
+    man.pop("tuning", None)                  # version 1 never carried one
+    json.dump(man, open(mpath, "w"))
+    loaded = bcnn_artifact.load_packed(saved)
+    x = jnp.asarray(np.random.default_rng(2).random(
+        (2, 32, 32, 3)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(bcnn.forward_packed(loaded, x, path="xla")),
+        np.asarray(bcnn.forward_packed(packed, x, path="xla")))
+    assert bcnn_artifact.load_tuning(saved) is None
+    # and the version floor still holds below the compat window
+    man["version"] = bcnn_artifact.MIN_VERSION - 1
+    json.dump(man, open(mpath, "w"))
+    with pytest.raises(bcnn_artifact.ArtifactError, match="version"):
+        bcnn_artifact.load_packed(saved)
+
+
 def test_missing_manifest_is_aborted_save(tmp_path):
     d = str(tmp_path / "empty")
     os.makedirs(d)

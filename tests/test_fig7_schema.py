@@ -222,6 +222,27 @@ def test_bench_record_schema():
             assert lm["occupancy_spread"] >= 1.0
             assert lm["step_compilations"] == 1
             assert lm["swap_step_compilations"] == 1
+        # records from the autotuner PR onward carry the tuned-vs-default
+        # A/B (kernels/autotune.py): bit-exactness between the plans, the
+        # exact one-compile contract on BOTH, and full plan descriptions
+        # (the same dict ExecutionPlan.describe() emits)
+        if rec["record"] >= 10:
+            assert "autotune" in rec, path.name
+            at = rec["autotune"]
+            assert at["n_candidates"] >= at["n_eligible"] >= 1
+            assert at["bit_exact"] is True
+            assert at["default_step_compilations"] == 1
+            assert at["tuned_step_compilations"] == 1
+            for which in ("default_plan", "tuned_plan"):
+                p = at[which]
+                assert {"path", "conv_strategy", "conv_fusion",
+                        "group_tiles", "lm_mode", "tuned"} <= p.keys()
+                assert len(p["conv_strategy"]) == 9
+            assert at["default_plan"]["tuned"] is False
+            assert at["tuned_plan"]["tuned"] is True
+            for point in ("online", "offline"):
+                assert at[f"default_{point}_img_per_s"] > 0
+                assert at[f"tuned_{point}_img_per_s"] > 0
 
 
 @pytest.mark.slow

@@ -62,6 +62,8 @@ DEFAULT_FILES = [
     "src/repro/configs/xnor_lm_tiny.py",
     "src/repro/launch/serve.py",
     "tests/test_xnor_lm.py",
+    "src/repro/core/execution_plan.py",
+    "src/repro/kernels/autotune.py",
 ]
 
 MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")

@@ -15,7 +15,11 @@ EVER across the load step, scale events in both directions, and
 co-scheduled bulk keeping online p99 strictly below the bulk-monopoly
 cliff. Records carrying the ``xnor_lm`` section (PR 9+) gate the binary
 LM's prefill/decode headline tok/s and its one-compile-across-hot-swap
-contract.
+contract. Records carrying the ``autotune`` section (PR 10+) gate the
+measured-plan A/B: the tuned plan must stay within the noise floor of
+the heuristic default (it can only win or tie — the default is in its
+candidate set), with bit-exact logits and exact one-compile contracts
+on both plans.
 
 Usage:  python tools/compare_bench.py                 # two newest records
         python tools/compare_bench.py OLD.json NEW.json
@@ -142,6 +146,31 @@ def compare(old: dict, new: dict) -> list[str]:
                 problems.append(
                     f"xnor_lm.{field}: LM decode step compile contract "
                     f"broken ({lm[field]} != 1)")
+    # autotuner claims (records that carry them, PR 10+): a measured plan
+    # may not LOSE to the heuristic default beyond the within-record noise
+    # floor (tuning that makes serving slower is a tuner bug, not noise —
+    # the default plan is always in its candidate set), the plans must
+    # have produced bit-identical logits, and both plans hold the exact
+    # one-compile contract
+    at = new.get("autotune")
+    if at is not None:
+        for point in ("online", "offline"):
+            tv = at[f"tuned_{point}_img_per_s"]
+            dv = at[f"default_{point}_img_per_s"]
+            if dv and tv < NOISE_FLOOR * dv:
+                problems.append(
+                    f"autotune.{point}: tuned plan {tv:.2f} img/s fell "
+                    f"below {NOISE_FLOOR}x the default plan's {dv:.2f} "
+                    f"(the tuner picked a loser)")
+        if at["bit_exact"] is not True:
+            problems.append("autotune.bit_exact: tuned plan did not "
+                            "reproduce the default plan's logits")
+        for field in ("default_step_compilations",
+                      "tuned_step_compilations"):
+            if at[field] != 1:
+                problems.append(
+                    f"autotune.{field}: step compile contract broken "
+                    f"({at[field]} != 1)")
     return problems
 
 
